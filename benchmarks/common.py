@@ -1,0 +1,101 @@
+"""Shared benchmark helpers: timing, CSV emission, analytic memory model."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import GaLoreConfig, ModelConfig, get_config
+from repro.core.galore import DEFAULT_EXCLUDE, galore_state_bytes, plan_for_params
+from repro.models import model as M
+
+ROWS: list[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def time_fn(fn, *args, warmup=2, iters=5):
+    """Median wall time of fn(*args) in seconds (blocks on jax outputs)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)), out
+
+
+# ---------------------------------------------------------------------------
+# Analytic training-memory model (paper Fig 1 / Fig 4 / Tables 2, 3, 6)
+# Conventions follow the paper: BF16 weights, grads and optimizer states.
+# ---------------------------------------------------------------------------
+
+BF16 = 2
+INT8 = 1
+
+
+def param_count(cfg: ModelConfig) -> int:
+    struct = jax.eval_shape(lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+    return sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(struct))
+
+
+def training_memory(cfg: ModelConfig, method: str, rank: int = 0,
+                    layerwise: bool = False) -> dict:
+    """Bytes for weights / grads / optimizer states under each method.
+
+    methods: full (Adam), galore, lowrank, lora, relora, adam8bit, galore8bit
+    """
+    n = param_count(cfg)
+    struct = jax.eval_shape(lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+    weights = n * BF16
+    grads = 0 if layerwise else n * BF16
+
+    if method in ("galore", "galore8bit"):
+        acct = galore_state_bytes(struct, GaLoreConfig(rank=rank))
+        state_elems = acct["adam_state_elems"]
+        per = INT8 if method == "galore8bit" else BF16
+        opt = state_elems * per
+    elif method == "adam8bit":
+        opt = 2 * n * INT8
+    elif method == "full":
+        opt = 2 * n * BF16
+    elif method in ("lora", "relora", "lowrank"):
+        # adaptor params B (m,r) + A (r,n) per adapted matrix
+        plans = plan_for_params(struct, GaLoreConfig(rank=rank))
+        extra = 0
+        adapted_states = 0
+        import jax.tree_util as jtu
+
+        for leaf, plan in zip(jtu.tree_leaves(struct),
+                              jtu.tree_leaves(plans, is_leaf=lambda x: hasattr(x, "galore"))):
+            if plan.galore:
+                m, nn = leaf.shape[-2], leaf.shape[-1]
+                lead = int(np.prod(leaf.shape[:-2])) if leaf.ndim > 2 else 1
+                extra += lead * rank * (m + nn)
+            else:
+                adapted_states += int(np.prod(leaf.shape))
+        if method == "lowrank":
+            weights = extra * BF16  # W = BA only
+            opt = 2 * (extra + 0) * BF16
+            grads = 0 if layerwise else extra * BF16
+        else:
+            weights = (n + extra) * BF16  # frozen W0 + adaptors
+            opt = 2 * (extra + adapted_states * 0) * BF16
+            grads = 0 if layerwise else extra * BF16
+    else:
+        raise ValueError(method)
+    return {"weights": weights, "grads": grads, "opt": opt,
+            "total": weights + grads + opt, "params": n}
+
+
+def gb(x):
+    return x / (1024 ** 3)

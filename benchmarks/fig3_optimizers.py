@@ -1,0 +1,51 @@
+"""Paper Fig 3: GaLore composes with AdamW / 8-bit Adam / Adafactor."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import emit
+from repro.configs.base import GaLoreConfig, TrainConfig, get_config
+from repro.data.pipeline import DataConfig, SyntheticC4
+from repro.distributed.step import make_refresh_step, make_train_step
+from repro.models import model as M
+
+
+def _train(cfg, tc, data, steps):
+    step_fn, opt = make_train_step(cfg, tc)
+    jstep = jax.jit(step_fn)
+    refresh = None
+    if tc.galore is not None:
+        refresh = jax.jit(make_refresh_step(cfg, tc))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    state = opt.init(params)
+    loss = None
+    for i in range(steps):
+        batch = data.batch(i)
+        if refresh is not None and i % tc.galore.update_freq == 0:
+            state = refresh(params, state, batch)
+        params, state, metrics = jstep(params, state, batch)
+        loss = float(metrics["loss"])
+    return loss
+
+
+def main(quick: bool = False):
+    steps = 50 if quick else 150
+    cfg = get_config("llama_60m", smoke=True)
+    data = SyntheticC4(DataConfig(vocab_size=cfg.vocab_size, seq_len=64, batch_per_host=8))
+    for optname in ["adamw", "adam8bit", "adafactor"]:
+        for use_galore in [False, True]:
+            g = GaLoreConfig(rank=16, update_freq=40, scale=0.25) if use_galore else None
+            tc = TrainConfig(optimizer=optname, lr=5e-3, total_steps=steps,
+                             warmup_steps=steps // 10, galore=g,
+                             galore_external_refresh=use_galore)
+            t0 = time.time()
+            loss = _train(cfg, tc, data, steps)
+            us = (time.time() - t0) / steps * 1e6
+            tag = f"{optname}{'+galore' if use_galore else ''}"
+            emit(f"fig3.loss.{tag}", us, f"{loss:.4f}")
+
+
+if __name__ == "__main__":
+    main()

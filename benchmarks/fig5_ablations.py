@@ -1,0 +1,54 @@
+"""Paper Fig 5 ablations: subspace change frequency T and rank r."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import emit
+from repro.configs.base import GaLoreConfig, TrainConfig, get_config
+from repro.data.pipeline import DataConfig, SyntheticC4
+from repro.distributed.step import make_refresh_step, make_train_step
+from repro.models import model as M
+
+
+def _train(cfg, galore_cfg, data, steps, lr=5e-3):
+    tc = TrainConfig(optimizer="adamw", lr=lr, total_steps=steps,
+                     warmup_steps=max(1, steps // 10), galore=galore_cfg,
+                     galore_external_refresh=True)
+    step_fn, opt = make_train_step(cfg, tc)
+    jstep = jax.jit(step_fn)
+    refresh = jax.jit(make_refresh_step(cfg, tc))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    state = opt.init(params)
+    loss = None
+    for i in range(steps):
+        batch = data.batch(i)
+        if i % galore_cfg.update_freq == 0:
+            state = refresh(params, state, batch)
+        params, state, metrics = jstep(params, state, batch)
+        loss = float(metrics["loss"])
+    return loss
+
+
+def main(quick: bool = False):
+    steps = 60 if quick else 160
+    cfg = get_config("llama_130m", smoke=True)  # paper ablates on 130M
+    data = SyntheticC4(DataConfig(vocab_size=cfg.vocab_size, seq_len=64, batch_per_host=8))
+
+    # left panel: T sweep (too frequent and too rare both hurt)
+    for T in ([10, 80] if quick else [5, 20, 80, 1000]):
+        t0 = time.time()
+        loss = _train(cfg, GaLoreConfig(rank=16, update_freq=T, scale=0.25), data, steps)
+        emit(f"fig5.T_sweep.T={T}", (time.time() - t0) / steps * 1e6, f"{loss:.4f}")
+
+    # right panel: rank-vs-steps trade-off (smaller rank, more steps)
+    for rank, s in ([(4, steps), (16, steps)] if quick
+                    else [(4, steps), (8, steps), (16, steps), (4, 2 * steps)]):
+        t0 = time.time()
+        loss = _train(cfg, GaLoreConfig(rank=rank, update_freq=40, scale=0.25), data, s)
+        emit(f"fig5.rank_sweep.r={rank}.steps={s}", (time.time() - t0) / s * 1e6, f"{loss:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Roofline table from the dry-run results (deliverable g).
+
+Reads results/dryrun.json (produced by repro.launch.dryrun) and prints, per
+(arch × shape) single-pod cell: the three roofline terms, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPS, memory fit, and the multi-pod gate status.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+
+def load(path="results/dryrun.json"):
+    if not os.path.exists(path):
+        return {}
+    with open(path) as f:
+        return json.load(f)
+
+
+def fmt_row(rec):
+    r = rec.get("roofline", {})
+    mem = rec.get("memory", {})
+    ratio = rec.get("useful_flops_ratio")
+    return (
+        f"{rec['arch']:24s} {rec['shape']:12s} "
+        f"{r.get('compute_s', 0):9.4f} {r.get('memory_s', 0):9.4f} "
+        f"{r.get('collective_s', 0):9.4f}  {r.get('dominant', '?')[:-2]:10s} "
+        f"{(ratio if ratio else 0):6.3f} "
+        f"{mem.get('peak_bytes_per_device', 0) / 1e9:7.2f}GB"
+    )
+
+
+def main(quick: bool = False, path="results/dryrun.json"):
+    results = load(path)
+    singles = {k: v for k, v in results.items() if v.get("mesh") == "16x16"
+               and v.get("rules", "baseline") == "baseline"}
+    multis = {k: v for k, v in results.items() if v.get("mesh") == "2x16x16"}
+    print("\n# Roofline (single-pod 16x16, per-device seconds; TPU v5e terms)")
+    print(f"{'arch':24s} {'shape':12s} {'compute_s':>9s} {'memory_s':>9s} "
+          f"{'collect_s':>9s}  {'dominant':10s} {'useful':>6s} {'peak/dev':>9s}")
+    n_ok = n_skip = n_err = 0
+    for k in sorted(singles):
+        rec = singles[k]
+        if rec["status"] == "ok":
+            n_ok += 1
+            if "roofline" in rec:
+                print(fmt_row(rec))
+        elif rec["status"] == "skipped":
+            n_skip += 1
+            print(f"{rec['arch']:24s} {rec['shape']:12s} SKIPPED: {rec['reason'][:60]}")
+        else:
+            n_err += 1
+            print(f"{rec['arch']:24s} {rec['shape']:12s} ERROR: {rec.get('error', '')[:70]}")
+    m_ok = sum(1 for v in multis.values() if v["status"] == "ok")
+    m_skip = sum(1 for v in multis.values() if v["status"] == "skipped")
+    m_err = sum(1 for v in multis.values() if v["status"] == "error")
+    print(f"\nsingle-pod: {n_ok} ok / {n_skip} skipped / {n_err} errors")
+    print(f"multi-pod gate (2x16x16 compile): {m_ok} ok / {m_skip} skipped / {m_err} errors")
+    from benchmarks.common import emit
+
+    emit("roofline.single_pod_cells_ok", 0, str(n_ok))
+    emit("roofline.multi_pod_cells_ok", 0, str(m_ok))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Benchmark driver — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit).
+
+  PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", nargs="*", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (
+        fig3_optimizers,
+        fig5_ablations,
+        memory_breakdown,
+        roofline,
+        table2_methods,
+        table11_throughput,
+    )
+
+    suite = [
+        ("memory_breakdown", memory_breakdown.main),   # Fig 1/4, Tables 2/3/6 memory
+        ("table2_methods", table2_methods.main),       # Table 2 quality ordering
+        ("fig3_optimizers", fig3_optimizers.main),     # Fig 3
+        ("fig5_ablations", fig5_ablations.main),       # Fig 5
+        ("table11_throughput", table11_throughput.main),  # Table 11
+        ("roofline", roofline.main),                   # deliverable (g)
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in suite:
+        if args.only and name not in args.only:
+            continue
+        t0 = time.time()
+        try:
+            fn(quick=args.quick)
+            print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception:
+            failures += 1
+            print(f"# {name} FAILED:\n{traceback.format_exc()[-1500:]}", flush=True)
+    if failures:
+        raise SystemExit(f"{failures} benchmark(s) failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Fine-tuning comparison (paper Table 4 analog): GaLore rank-4 vs LoRA rank-4.
+
+"Pre-trains" a tiny model on stream A, then fine-tunes on a shifted
+distribution (stream B) with (a) GaLore rank 4, (b) LoRA rank 4 — the paper's
+claim is parity-or-better for GaLore at lower memory.
+
+    PYTHONPATH=src python examples/finetune_lowrank.py
+"""
+import jax
+
+from repro.configs.base import GaLoreConfig, TrainConfig, get_config
+from repro.core.galore import galore_state_bytes
+from repro.data.pipeline import DataConfig, SyntheticC4
+from repro.distributed.step import make_refresh_step, make_train_step
+from repro.models import model as M
+from repro.optim.adam import scale_by_adam
+from repro.optim.lowrank import LoraConfig, adaptor_param_count, init_adaptors, merge
+from repro.optim.transform import apply_updates
+
+PRETRAIN_STEPS, FT_STEPS, RANK = 120, 80, 4
+
+
+def pretrain(cfg):
+    tc = TrainConfig(optimizer="adamw", lr=5e-3, total_steps=PRETRAIN_STEPS, warmup_steps=10)
+    step_fn, opt = make_train_step(cfg, tc)
+    jstep = jax.jit(step_fn)
+    data = SyntheticC4(DataConfig(vocab_size=cfg.vocab_size, seq_len=64, batch_per_host=8, seed=0))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    state = opt.init(params)
+    for i in range(PRETRAIN_STEPS):
+        params, state, metrics = jstep(params, state, data.batch(i))
+    print(f"[pretrain] loss {float(metrics['loss']):.4f}")
+    return params
+
+
+def finetune_galore(cfg, params, data):
+    tc = TrainConfig(optimizer="adamw", lr=2e-3, total_steps=FT_STEPS, warmup_steps=5,
+                     galore=GaLoreConfig(rank=RANK, update_freq=25, scale=1.0),
+                     galore_external_refresh=True)
+    step_fn, opt = make_train_step(cfg, tc)
+    jstep = jax.jit(step_fn)
+    refresh = jax.jit(make_refresh_step(cfg, tc))
+    state = opt.init(params)
+    for i in range(FT_STEPS):
+        b = data.batch(i)
+        if i % tc.galore.update_freq == 0:
+            state = refresh(params, state, b)
+        params, state, metrics = jstep(params, state, b)
+    acct = galore_state_bytes(params, tc.galore)
+    return float(metrics["loss"]), acct["adam_state_elems"]
+
+
+def finetune_lora(cfg, params, data):
+    lcfg = LoraConfig(rank=RANK, alpha=32)
+    key = jax.random.PRNGKey(7)
+    adaptors = init_adaptors(params, lcfg, key)
+    opt = scale_by_adam()
+    st = opt.init(adaptors)
+    lr = 2e-3
+
+    @jax.jit
+    def step(ad, st, batch):
+        def loss_fn(a):
+            return M.loss_fn(cfg, merge(params, a, lcfg), batch)[0]
+        loss, g = jax.value_and_grad(loss_fn)(ad)
+        upd, st2 = opt.update(g, st, ad)
+        return apply_updates(ad, jax.tree_util.tree_map(lambda u: -lr * u, upd)), st2, loss
+
+    for i in range(FT_STEPS):
+        adaptors, st, loss = step(adaptors, st, data.batch(i))
+    return float(loss), 2 * adaptor_param_count(adaptors)
+
+
+def main():
+    cfg = get_config("llama_60m", smoke=True)
+    params = pretrain(cfg)
+    ft_data = SyntheticC4(DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
+                                     batch_per_host=8, seed=99))  # shifted task
+    g_loss, g_state = finetune_galore(cfg, params, ft_data)
+    l_loss, l_state = finetune_lora(cfg, params, ft_data)
+    print(f"[finetune] GaLore r={RANK}: loss {g_loss:.4f}, opt-state elems {g_state/1e3:.0f}k")
+    print(f"[finetune] LoRA   r={RANK}: loss {l_loss:.4f}, opt-state elems {l_state/1e3:.0f}k")
+    print(f"[finetune] GaLore-vs-LoRA state ratio: {g_state/max(l_state,1):.2f}x "
+          f"(paper Table 1: mr+2nr vs 2mr+2nr per matrix)")
+
+
+if __name__ == "__main__":
+    main()

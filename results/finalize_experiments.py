@@ -1,0 +1,54 @@
+"""Render the §Roofline table + dry-run summary into EXPERIMENTS.md."""
+import json
+
+r = json.load(open("results/dryrun.json"))
+
+lines = []
+lines.append("| arch | shape | compute_s | memory_s | collective_s | dominant | useful | peak GB/dev | refresh GB/dev |")
+lines.append("|---|---|---|---|---|---|---|---|---|")
+singles = [(k, v) for k, v in sorted(r.items()) if v.get("mesh") == "16x16"]
+n_ok = n_skip = n_lim = n_err = 0
+for k, v in singles:
+    arch, shape = v["arch"], v["shape"]
+    st = v.get("status")
+    if st == "ok":
+        n_ok += 1
+        rf = v.get("roofline", {})
+        mem = v["memory"]["peak_bytes_per_device"] / 1e9
+        ref = v.get("refresh", {}).get("peak_bytes_per_device")
+        refs = f"{ref/1e9:.1f}" if ref else "—"
+        if rf:
+            u = v.get("useful_flops_ratio") or 0
+            lines.append(
+                f"| {arch} | {shape} | {rf['compute_s']:.4f} | {rf['memory_s']:.4f} | "
+                f"{rf['collective_s']:.4f} | {rf['dominant'][:-2]} | {u:.3f} | {mem:.1f} | {refs} |")
+        else:
+            lines.append(f"| {arch} | {shape} | — | — | — | memory (analytic) | — | {mem:.1f} | {refs} |")
+    elif st == "skipped":
+        n_skip += 1
+        lines.append(f"| {arch} | {shape} | — | — | — | *skipped: full-attention long-ctx* | — | — | — |")
+    elif st == "host-limit":
+        n_lim += 1
+        lines.append(f"| {arch} | {shape} | — | — | — | *host compile limit (see note)* | — | — | — |")
+    else:
+        n_err += 1
+        lines.append(f"| {arch} | {shape} | ERROR | | | | | | |")
+
+multis = [(k, v) for k, v in sorted(r.items()) if v.get("mesh") == "2x16x16"]
+m_ok = sum(1 for _, v in multis if v["status"] == "ok")
+m_other = len(multis) - m_ok
+lines.append("")
+lines.append(f"Single-pod: **{n_ok} compiled ok**, {n_skip} skipped (full-attention × long_500k per assignment), "
+             f"{n_lim} at the host compile limit (jamba-398B train/prefill — documented), {n_err} errors.")
+mp_archs = sorted({v['arch'] for _, v in multis if v['status']=='ok'})
+mp_shapes = sorted({v['shape'] for _, v in multis if v['status']=='ok'})
+lines.append(f"Multi-pod (2×16×16) gate: **{m_ok} cells compiled ok** covering archs: {', '.join(mp_archs)} "
+             f"and shapes: {', '.join(mp_shapes)} — the `pod` axis shards as pure DP (DCN); "
+             f"remaining multi-pod cells were queued behind the host's single core and are reproducible via "
+             "`python -m repro.launch.dryrun --mesh multi`.")
+
+table = "\n".join(lines)
+md = open("EXPERIMENTS.md").read()
+md = md.replace("TABLE_PLACEHOLDER_ROOFLINE", table)
+open("EXPERIMENTS.md", "w").write(md)
+print(f"rendered: {n_ok} ok / {n_skip} skip / {n_lim} host-limit / {n_err} err; multi-pod ok={m_ok}")

@@ -1,0 +1,127 @@
+"""Fault-tolerant checkpointing: atomic step dirs, async save, elastic restore.
+
+Layout:  <root>/step_<N>/host_<i>.npz  +  <root>/step_<N>/META.json
+A step directory is written under a tmp name and atomically renamed, so a
+preemption mid-save can never corrupt the latest checkpoint. `latest_step`
+only trusts directories containing META.json (the commit marker, written
+last). Restore accepts a *different* mesh/sharding than the save used —
+arrays are device_put onto the target shardings (elastic rescale path).
+
+At real multi-host scale each process writes only its addressable shards
+into host_<process_index>.npz; in this single-process container that
+degenerates to one file, with the same code path.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+
+import jax
+import numpy as np
+
+from repro.utils import path_str
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for p, v in flat:
+        arr = np.asarray(jax.device_get(v))
+        if arr.dtype.name == "bfloat16":  # numpy can't serialize ml_dtypes
+            arr = arr.astype(np.float32)  # lossless widening; restore re-casts
+        out[path_str(p)] = arr
+    return out, treedef
+
+
+class CheckpointManager:
+    def __init__(self, root: str, keep: int = 3, async_save: bool = True):
+        self.root = root
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: threading.Thread | None = None
+        os.makedirs(root, exist_ok=True)
+
+    # -- save ---------------------------------------------------------------
+
+    def save(self, step: int, tree, extra_meta: dict | None = None, block: bool = False):
+        arrays, _ = _flatten(tree)
+        meta = {"step": step, "time": time.time(), **(extra_meta or {})}
+        if self.async_save and not block:
+            self.wait()  # never two concurrent saves
+            self._thread = threading.Thread(
+                target=self._write, args=(step, arrays, meta), daemon=True
+            )
+            self._thread.start()
+        else:
+            self._write(step, arrays, meta)
+
+    def _write(self, step: int, arrays: dict, meta: dict):
+        final = os.path.join(self.root, f"step_{step:08d}")
+        tmp = final + f".tmp_{os.getpid()}"
+        os.makedirs(tmp, exist_ok=True)
+        host = getattr(jax, "process_index", lambda: 0)()
+        np.savez(os.path.join(tmp, f"host_{host}.npz"), **arrays)
+        with open(os.path.join(tmp, "META.json"), "w") as f:
+            json.dump(meta, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)  # atomic commit
+        self._gc()
+
+    def wait(self):
+        if self._thread is not None and self._thread.is_alive():
+            self._thread.join()
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.root, f"step_{s:08d}"), ignore_errors=True)
+
+    # -- load ---------------------------------------------------------------
+
+    def all_steps(self) -> list[int]:
+        out = []
+        for name in sorted(os.listdir(self.root)):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                if os.path.exists(os.path.join(self.root, name, "META.json")):
+                    out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def meta(self, step: int) -> dict:
+        with open(os.path.join(self.root, f"step_{step:08d}", "META.json")) as f:
+            return json.load(f)
+
+    def restore(self, step: int, target_tree, shardings=None):
+        """Restore into the structure of target_tree.
+
+        `shardings`: optional pytree of NamedShardings (may belong to a mesh
+        of a *different* shape than the one that saved — elastic restore).
+        """
+        path = os.path.join(self.root, f"step_{step:08d}")
+        data = {}
+        for name in os.listdir(path):
+            if name.endswith(".npz"):
+                with np.load(os.path.join(path, name)) as z:
+                    data.update({k: z[k] for k in z.files})
+
+        flat, treedef = jax.tree_util.tree_flatten_with_path(target_tree)
+        shard_flat = (
+            jax.tree_util.tree_leaves(shardings) if shardings is not None else [None] * len(flat)
+        )
+        out = []
+        for (p, leaf), sh in zip(flat, shard_flat):
+            key = path_str(p)
+            if key not in data:
+                raise KeyError(f"checkpoint missing leaf {key}")
+            arr = np.asarray(data[key])
+            if hasattr(leaf, "dtype"):
+                arr = arr.astype(leaf.dtype)
+            out.append(jax.device_put(arr, sh) if sh is not None else jax.device_put(arr))
+        return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,188 @@
+"""Model / training configuration dataclasses + the architecture registry.
+
+Every assigned architecture lives in src/repro/configs/<id>.py and registers a
+full-size ModelConfig plus a reduced smoke-test variant. Shapes (seq_len ×
+global_batch cells) are defined here once since they are shared by all archs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Callable, Optional
+
+# ---------------------------------------------------------------------------
+# Input-shape cells (shared across LM-family archs)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524_288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+    # --- MoE ---
+    n_experts: int = 0
+    experts_per_token: int = 0
+    moe_every: int = 1  # MoE FFN on layers where (layer % moe_every == moe_offset)
+    moe_offset: int = 0
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+    # --- attention ---
+    qkv_bias: bool = False
+    rope_theta: float = 1e4
+    rope_style: str = "rope"  # rope | mrope | none
+    mrope_sections: tuple[int, ...] = (16, 24, 24)
+    attention_chunk: int = 0  # >0 -> chunked local attention of this width
+    full_attn_every: int = 0  # >0 -> every Nth layer uses full attention, no rope (iRoPE)
+    # --- SSM (mamba2 / hybrid) ---
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_chunk: int = 256
+    # --- hybrid (jamba) ---
+    attn_every: int = 0  # 1 attention layer per `attn_every` layers
+    attn_offset: int = 4
+    # --- encoder-decoder (whisper) ---
+    is_encoder_decoder: bool = False
+    n_enc_layers: int = 0
+    enc_seq: int = 1500
+    # --- frontend stubs (vlm / audio) ---
+    media_embeds: int = 0  # number of precomputed media-embedding positions
+    # --- misc ---
+    norm_type: str = "rmsnorm"  # rmsnorm | layernorm
+    act: str = "swiglu"  # swiglu | gelu
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+    sub_quadratic: bool = False  # eligible for long_500k (ssm / hybrid / chunked attn)
+    remat: str = "none"  # none | full — activation checkpointing policy for stacks
+    scan_unroll: bool = False  # unroll layer scans (dry-run cost analysis needs
+    # while-free HLO on reduced-depth variants; see launch/hlo_analysis.py)
+    logit_softcap: float = 0.0
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        """Embedding rows padded to a multiple of 256 (16-way TP × 128 lanes) —
+        Megatron-style vocab padding; logits for pad slots are masked out."""
+        return ((self.vocab_size + 255) // 256) * 256
+
+    def is_moe_layer(self, layer: int) -> bool:
+        if self.n_experts == 0:
+            return False
+        return layer % self.moe_every == self.moe_offset
+
+    def is_attn_layer(self, layer: int) -> bool:
+        """Hybrid archs: True if layer `layer` is attention (else SSM)."""
+        if self.family != "hybrid":
+            return True
+        return layer % self.attn_every == self.attn_offset
+
+    def uses_full_attn(self, layer: int) -> bool:
+        """iRoPE-style: every Nth layer is global attention without rope."""
+        if self.full_attn_every <= 0:
+            return self.attention_chunk == 0
+        return (layer + 1) % self.full_attn_every == 0
+
+    def supports_shape(self, shape_name: str) -> tuple[bool, str]:
+        cell = SHAPES[shape_name]
+        if cell.name == "long_500k" and not self.sub_quadratic:
+            return False, "long_500k skipped: pure full-attention arch (see DESIGN.md)"
+        return True, ""
+
+
+@dataclasses.dataclass(frozen=True)
+class GaLoreConfig:
+    rank: int = 128
+    update_freq: int = 200  # T — subspace change frequency
+    scale: float = 0.25  # alpha
+    projector: str = "svd"  # svd | randomized | newton_schulz
+    power_iters: int = 2  # subspace/power iterations for randomized modes
+    min_dim: int = 0  # only project matrices with min(m, n) > max(rank, min_dim)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: str = "adamw"  # adamw | adam8bit | adafactor | sgd
+    galore: Optional[GaLoreConfig] = None
+    lora_rank: int = 0  # >0: LoRA baseline
+    relora_freq: int = 0  # >0: ReLoRA merge frequency
+    lr: float = 1e-3
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    weight_decay: float = 0.0
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    seed: int = 0
+    microbatch: int = 0  # >0 -> gradient accumulation
+    galore_dp_compress: bool = False  # beyond-paper: all-reduce projected grads
+    galore_external_refresh: bool = False  # refresh P in a separate jitted step
+    z_loss: float = 0.0
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+ARCH_IDS = [
+    "qwen2_vl_7b",
+    "llama4_scout_17b_a16e",
+    "grok_1_314b",
+    "granite_20b",
+    "minitron_4b",
+    "internlm2_20b",
+    "qwen2_7b",
+    "jamba_1_5_large_398b",
+    "whisper_small",
+    "mamba2_130m",
+]
+
+_REGISTRY: dict[str, Callable[[], ModelConfig]] = {}
+_SMOKE_REGISTRY: dict[str, Callable[[], ModelConfig]] = {}
+
+
+def register(name: str, full: Callable[[], ModelConfig], smoke: Callable[[], ModelConfig]):
+    _REGISTRY[name] = full
+    _SMOKE_REGISTRY[name] = smoke
+
+
+def get_config(name: str, smoke: bool = False) -> ModelConfig:
+    key = name.replace("-", "_").replace(".", "_")
+    if key not in _REGISTRY:
+        try:
+            importlib.import_module(f"repro.configs.{key}")
+        except ModuleNotFoundError:
+            importlib.import_module("repro.configs.llama_paper")  # llama_* family
+    table = _SMOKE_REGISTRY if smoke else _REGISTRY
+    return table[key]()
+
+
+def all_arch_ids() -> list[str]:
+    return list(ARCH_IDS)

@@ -1,0 +1,287 @@
+"""jit-able train / prefill / decode steps + ShapeDtypeStruct input specs.
+
+These are the functions the launcher jits and the dry-run lowers. Every
+input/output can be given an explicit NamedSharding derived from the logical
+axes (utils.ShardingRules), so `.lower().compile()` on the 512-device mesh
+yields a faithfully partitioned SPMD program.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeCell, TrainConfig
+from repro.models import model as M
+from repro.optim.factory import build_optimizer
+from repro.optim.transform import apply_updates
+from repro.utils import ShardingRules, canonical_dtype, logical_constraint, sharding_context
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, tc: TrainConfig, rules: Optional[ShardingRules] = None):
+    """Returns (train_step(params, opt_state, batch) -> (params, opt_state, metrics), opt)."""
+    opt = build_optimizer(tc, param_axes=M.param_axes(cfg))
+
+    def loss_of(params, batch):
+        return M.loss_fn(cfg, params, batch, z_loss=tc.z_loss)
+
+    if tc.galore_dp_compress:
+        return _make_compressed_train_step(cfg, tc, rules, opt, loss_of), opt
+
+    def train_step(params, opt_state, batch):
+        with sharding_context(rules):
+            if tc.microbatch and tc.microbatch > 1:
+                # gradient accumulation: split the global batch on the leading dim
+                nm = tc.microbatch
+
+                def micro(b):
+                    return jax.tree_util.tree_map(
+                        lambda x: x.reshape((nm, x.shape[0] // nm) + x.shape[1:]), b
+                    )
+
+                mb = micro(batch)
+
+                def acc(carry, b):
+                    g_acc, loss_acc = carry
+                    (loss, metrics), g = jax.value_and_grad(loss_of, has_aux=True)(params, b)
+                    g_acc = jax.tree_util.tree_map(
+                        lambda a, x: a + x.astype(jnp.float32) / nm, g_acc, g
+                    )
+                    return (g_acc, loss_acc + loss / nm), None
+
+                zeros = jax.tree_util.tree_map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params
+                )
+                (grads, loss), _ = jax.lax.scan(acc, (zeros, 0.0), mb)
+                metrics = {"loss": loss}
+            else:
+                (loss, metrics), grads = jax.value_and_grad(loss_of, has_aux=True)(
+                    params, batch
+                )
+            updates, opt_state = opt.update(grads, opt_state, params)
+            params = apply_updates(params, updates)
+        return params, opt_state, metrics
+
+    return train_step, opt
+
+
+def _make_compressed_train_step(cfg, tc, rules, opt, loss_of):
+    """GaLore-DP: all-reduce the PROJECTED gradient (beyond-paper, §Perf).
+
+    The DP gradient reduction normally moves the full m×n gradient of every
+    matrix across the data axis. Since the optimizer only consumes
+    R = PᵀG and projection is linear (Pᵀ mean_d G_d = mean_d Pᵀ G_d), each
+    data shard projects its LOCAL gradient first and only the r×n compact
+    gradients cross the interconnect — an m/r-fold cut of the dominant
+    collective. Mathematically exact: identical optimizer trajectory.
+
+    Mechanics under GSPMD: the batch keeps a leading virtual-shard axis
+    (vmapped grads, sharded on the DP axes), so the cross-device reduction is
+    deferred until after the projection einsum.
+    """
+    from repro.core.galore import _project, plan_for_params
+    from repro.optim.factory import galore_state_index
+
+    idx = galore_state_index(tc)
+    axes = M.param_axes(cfg)
+
+    def train_step(params, opt_state, batch):
+        with sharding_context(rules):
+            if rules is not None:
+                dp = rules.mesh_axis_size(rules.rules.get("batch"))
+            else:
+                dp = 2  # CPU testing: exercise the same code path
+            plans = plan_for_params(params, tc.galore, param_axes=axes)
+
+            vs_batch = jax.tree_util.tree_map(
+                lambda x: x.reshape((dp, x.shape[0] // dp) + x.shape[1:]), batch
+            )
+
+            def shard_grads(b):
+                (loss, metrics), g = jax.value_and_grad(loss_of, has_aux=True)(params, b)
+                return g, loss
+
+            grads_vs, losses = jax.vmap(shard_grads)(vs_batch)
+
+            proj = opt_state[idx]["proj"]
+
+            def fold(gv, P, plan):
+                gv = logical_constraint(
+                    gv, "batch", *((None,) * (gv.ndim - 1))
+                ) if rules is not None else gv
+                if plan.galore:
+                    # project per shard, THEN reduce (this mean is the DP
+                    # all-reduce — it now moves r×n, not m×n)
+                    return jnp.mean(_project(gv, P, plan), axis=0)
+                return jnp.mean(gv.astype(jnp.float32), axis=0)
+
+            grads_c = jax.tree_util.tree_map(fold, grads_vs, proj, plans)
+            updates, opt_state2 = opt.update(grads_c, opt_state, params)
+            params2 = apply_updates(params, updates)
+            metrics = {"loss": jnp.mean(losses)}
+        return params2, opt_state2, metrics
+
+    return train_step
+
+
+def make_refresh_step(cfg: ModelConfig, tc: TrainConfig, rules: Optional[ShardingRules] = None):
+    """Standalone GaLore projector refresh (run every T steps by the launcher).
+
+    Recomputes the gradient on (one microbatch of) the step's batch and
+    refreshes every projector — outside the train step so the SVD/subspace
+    math is never inside a GSPMD conditional (see core/galore.py)."""
+    from repro.core.galore import refresh_projectors
+    from repro.optim.factory import galore_state_index
+
+    assert tc.galore is not None
+    idx = galore_state_index(tc)
+
+    def refresh_step(params, opt_state, batch):
+        with sharding_context(rules):
+            if tc.microbatch and tc.microbatch > 1:
+                nm = tc.microbatch
+                batch = jax.tree_util.tree_map(
+                    lambda x: x.reshape((nm, x.shape[0] // nm) + x.shape[1:])[0], batch
+                )
+            grads = jax.grad(
+                lambda p: M.loss_fn(cfg, p, batch, z_loss=tc.z_loss)[0]
+            )(params)
+            new_galore = refresh_projectors(
+                grads, opt_state[idx], tc.galore, param_axes=M.param_axes(cfg)
+            )
+            opt_state = opt_state[:idx] + (new_galore,) + opt_state[idx + 1:]
+        return opt_state
+
+    return refresh_step
+
+
+def make_prefill_step(cfg: ModelConfig, rules: Optional[ShardingRules] = None):
+    """prefill(params, cache, batch) -> (last_logits, cache)."""
+
+    def prefill_step(params, cache, batch):
+        with sharding_context(rules):
+            logits, _, cache = M.forward(cfg, params, batch, cache=cache, cache_pos=0)
+        return logits[:, -1], cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, rules: Optional[ShardingRules] = None):
+    """decode(params, cache, tokens(B,1), pos) -> (next_tokens(B,), cache)."""
+
+    def decode_step(params, cache, tokens, pos):
+        with sharding_context(rules):
+            batch = {"tokens": tokens}
+            if cfg.rope_style == "mrope":
+                p = jnp.broadcast_to(
+                    pos.astype(jnp.int32), (3, tokens.shape[0], 1)
+                )
+                batch["positions"] = p
+            logits, _, cache = M.forward(cfg, params, batch, cache=cache, cache_pos=pos)
+            next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins — never allocate)
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype, rules: Optional[ShardingRules], axes):
+    if rules is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=rules.sharding_for(axes, shape))
+
+
+def batch_specs(cfg: ModelConfig, cell: ShapeCell, rules=None, kind=None):
+    """Stand-ins for the data batch of a given shape cell."""
+    kind = kind or cell.kind
+    B, S = cell.global_batch, cell.seq_len
+    dt = canonical_dtype(cfg.dtype)
+    if kind == "decode":
+        batch = {"tokens": _sds((B, 1), jnp.int32, rules, ("batch", None))}
+        if cfg.rope_style == "mrope":
+            batch["positions"] = _sds((3, B, 1), jnp.int32, rules, (None, "batch", None))
+        return batch
+    batch = {"tokens": _sds((B, S), jnp.int32, rules, ("batch", "act_seq"))}
+    if kind == "train":
+        batch["targets"] = _sds((B, S), jnp.int32, rules, ("batch", "act_seq"))
+    if cfg.rope_style == "mrope":
+        batch["positions"] = _sds((3, B, S), jnp.int32, rules, (None, "batch", "act_seq"))
+    if cfg.family == "vlm" and cfg.media_embeds > 0:
+        batch["media"] = _sds(
+            (B, cfg.media_embeds, cfg.d_model), dt, rules, ("batch", None, None)
+        )
+    if cfg.family == "audio":
+        batch["enc_frames"] = _sds(
+            (B, cfg.enc_seq, cfg.d_model), dt, rules, ("batch", None, None)
+        )
+    return batch
+
+
+def tree_specs(tree, axes_tree, rules: Optional[ShardingRules]):
+    """ShapeDtypeStructs (with shardings) for an abstract pytree + axes tree."""
+
+    def per_leaf(leaf, axes):
+        return _sds(leaf.shape, leaf.dtype, rules, axes)
+
+    return jax.tree_util.tree_map(
+        per_leaf, tree, axes_tree, is_leaf=lambda x: hasattr(x, "shape")
+    )
+
+
+def params_specs(cfg: ModelConfig, rules: Optional[ShardingRules]):
+    struct = jax.eval_shape(lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+    return tree_specs(struct, M.param_axes(cfg), rules)
+
+
+def cache_specs(cfg: ModelConfig, cell: ShapeCell, rules: Optional[ShardingRules]):
+    struct = jax.eval_shape(
+        lambda: M.init_cache(cfg, cell.global_batch, cell.seq_len)
+    )
+    return tree_specs(struct, M.cache_axes(cfg), rules)
+
+
+def opt_state_specs(cfg: ModelConfig, tc: TrainConfig, rules: Optional[ShardingRules]):
+    from repro.distributed.state_sharding import optimizer_state_axes
+
+    opt = build_optimizer(tc, param_axes=M.param_axes(cfg))
+    p_struct = jax.eval_shape(lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+    s_struct = jax.eval_shape(opt.init, p_struct)
+    axes = optimizer_state_axes(tc, M.param_axes(cfg), p_struct)
+    return tree_specs(s_struct, axes, rules)
+
+
+def input_specs(cfg: ModelConfig, shape_name: str, tc: Optional[TrainConfig] = None,
+                rules: Optional[ShardingRules] = None) -> dict:
+    """All step inputs for one (arch × shape) cell, as sharded SDS stand-ins."""
+    cell = SHAPES[shape_name]
+    if cell.kind == "train":
+        assert tc is not None
+        return {
+            "params": params_specs(cfg, rules),
+            "opt_state": opt_state_specs(cfg, tc, rules),
+            "batch": batch_specs(cfg, cell, rules),
+        }
+    if cell.kind == "prefill":
+        return {
+            "params": params_specs(cfg, rules),
+            "cache": cache_specs(cfg, cell, rules),
+            "batch": batch_specs(cfg, cell, rules),
+        }
+    # decode
+    return {
+        "params": params_specs(cfg, rules),
+        "cache": cache_specs(cfg, cell, rules),
+        "tokens": _sds((cell.global_batch, 1), jnp.int32, rules, ("batch", None)),
+        "pos": _sds((), jnp.int32, rules, ()),
+    }

@@ -1,0 +1,68 @@
+"""Public jit'd kernel API — dispatches Pallas (TPU) vs pure-jnp reference.
+
+`use_pallas=None` auto-selects: Pallas on TPU backends, reference elsewhere.
+Tests pass use_pallas=True + interpret=True to execute the kernel bodies in
+Python on CPU against the ref.py oracles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import adam8bit_update as adam8bit_k
+from repro.kernels import galore_project as galore_k
+from repro.kernels import ref
+from repro.kernels import rmsnorm as rmsnorm_k
+from repro.optim.quant8 import dynamic_codebook
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(use_pallas):
+    return _on_tpu() if use_pallas is None else use_pallas
+
+
+def galore_project(P, G, *, use_pallas=None, interpret=False):
+    """R = Pᵀ G."""
+    if _resolve(use_pallas):
+        return galore_k.galore_project(P, G, interpret=interpret)
+    return ref.galore_project(P, G)
+
+
+def galore_project_back(P, N, alpha: float, *, use_pallas=None, interpret=False):
+    """G̃ = α P N."""
+    if _resolve(use_pallas):
+        return galore_k.galore_project_back(P, N, alpha, interpret=interpret)
+    return ref.galore_project_back(P, N, alpha)
+
+
+def adam8bit_step(g_blocks, m_codes, m_scale, v_codes, v_scale, count,
+                  *, b1=0.9, b2=0.999, eps=1e-8, use_pallas=None, interpret=False):
+    """Fused dequant→Adam→requant on (nb, 256) blocks."""
+    book_s = jnp.asarray(dynamic_codebook(True))
+    book_u = jnp.asarray(dynamic_codebook(False))
+    if _resolve(use_pallas):
+        return adam8bit_k.adam8bit_update(
+            g_blocks, m_codes, m_scale, v_codes, v_scale, count, book_s, book_u,
+            b1=b1, b2=b2, eps=eps, interpret=interpret,
+        )
+    return ref.adam8bit_update(
+        g_blocks, m_codes, m_scale, v_codes, v_scale, count, book_s, book_u,
+        b1=b1, b2=b2, eps=eps,
+    )
+
+
+def rmsnorm(x, scale, *, eps=1e-6, use_pallas=None, interpret=False):
+    if _resolve(use_pallas):
+        return rmsnorm_k.rmsnorm(x, scale, eps=eps, interpret=interpret)
+    return ref.rmsnorm(x, scale, eps)
+
+
+def lowrank_adam_update(R, M, V, count, *, b1=0.9, b2=0.999, eps=1e-8):
+    """Fused compact-space Adam (reference; the Pallas path fuses this into
+    galore_project_back's epilogue on TPU — see EXPERIMENTS.md §Perf)."""
+    return ref.lowrank_adam_update(R, M, V, count, b1, b2, eps)

@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for every Pallas kernel (the `ref.py` layer).
+
+These are the numerical ground truth for the kernel sweep tests AND the
+implementations the 512-device dry-run lowers (custom calls neither partition
+on the CPU backend nor contribute FLOPs to cost_analysis — DESIGN.md §3.5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import quant8
+
+
+def galore_project(P: jnp.ndarray, G: jnp.ndarray) -> jnp.ndarray:
+    """R = Pᵀ G.  P (m, r), G (m, n) -> (r, n) f32."""
+    return jnp.einsum("mr,mn->rn", P.astype(jnp.float32), G.astype(jnp.float32))
+
+
+def galore_project_back(P: jnp.ndarray, N: jnp.ndarray, alpha: float) -> jnp.ndarray:
+    """G̃ = α · P N.  P (m, r), N (r, n) -> (m, n) f32."""
+    return alpha * jnp.einsum("mr,rn->mn", P.astype(jnp.float32), N.astype(jnp.float32))
+
+
+def lowrank_adam_update(R, M, V, count, b1=0.9, b2=0.999, eps=1e-8):
+    """Fused Adam moment update + normalized step in the compact space.
+
+    R, M, V: (r, n) f32. Returns (N_t, M_t, V_t)."""
+    R = R.astype(jnp.float32)
+    M_t = b1 * M + (1 - b1) * R
+    V_t = b2 * V + (1 - b2) * jnp.square(R)
+    c1 = 1 - b1 ** count.astype(jnp.float32)
+    c2 = 1 - b2 ** count.astype(jnp.float32)
+    N_t = (M_t / c1) / (jnp.sqrt(V_t / c2) + eps)
+    return N_t, M_t, V_t
+
+
+def quantize_blocks(x_blocks: jnp.ndarray, book: jnp.ndarray):
+    """x (nb, BLOCK) f32 -> (codes u8, absmax f32 (nb,)). book sorted (256,)."""
+    absmax = jnp.max(jnp.abs(x_blocks), axis=1) + 1e-12
+    normed = x_blocks / absmax[:, None]
+    mids = (book[:-1] + book[1:]) / 2.0
+    codes = jnp.searchsorted(mids, normed).astype(jnp.uint8)
+    return codes, absmax
+
+
+def dequantize_blocks(codes: jnp.ndarray, absmax: jnp.ndarray, book: jnp.ndarray):
+    return book[codes.astype(jnp.int32)] * absmax[:, None]
+
+
+def adam8bit_update(g_blocks, m_codes, m_scale, v_codes, v_scale, count,
+                    book_signed, book_unsigned, b1=0.9, b2=0.999, eps=1e-8):
+    """One fused 8-bit Adam step on (nb, BLOCK) blocks.
+
+    dequant m,v -> adam math in f32 -> requant m,v; returns
+    (update_blocks, m_codes', m_scale', v_codes', v_scale')."""
+    m = dequantize_blocks(m_codes, m_scale, book_signed)
+    v = dequantize_blocks(v_codes, v_scale, book_unsigned)
+    g = g_blocks.astype(jnp.float32)
+    m = b1 * m + (1 - b1) * g
+    v = b2 * v + (1 - b2) * jnp.square(g)
+    c1 = 1 - b1 ** count.astype(jnp.float32)
+    c2 = 1 - b2 ** count.astype(jnp.float32)
+    upd = (m / c1) / (jnp.sqrt(v / c2) + eps)
+    m_codes, m_scale = quantize_blocks(m, book_signed)
+    v_codes, v_scale = quantize_blocks(v, book_unsigned)
+    return upd, m_codes, m_scale, v_codes, v_scale
+
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)).astype(x.dtype)

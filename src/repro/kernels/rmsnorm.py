@@ -1,0 +1,45 @@
+"""Fused RMSNorm Pallas kernel (row-tiled, single HBM pass).
+
+Unfused RMSNorm reads x twice (square-reduce, then normalize); this kernel
+streams (rows × d) VMEM tiles and fuses reduce + scale. d is loaded whole per
+row tile (d_model ≤ 8192 → ≤ 512 KB bf16 per 32-row tile)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_TILE = 32
+
+
+def _kernel(x_ref, scale_ref, out_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out_ref[...] = (x * jax.lax.rsqrt(ms + eps) * scale_ref[...].astype(jnp.float32)).astype(
+        out_ref.dtype
+    )
+
+
+def rmsnorm(x, scale, *, eps: float = 1e-6, interpret: bool = False):
+    """x (..., d), scale (d,) -> same shape/dtype as x."""
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    rows = 1
+    for s in orig_shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, d)
+    rt = min(ROW_TILE, rows)
+    out = pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        grid=(pl.cdiv(rows, rt),),
+        in_specs=[
+            pl.BlockSpec((rt, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((rt, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        interpret=interpret,
+    )(x2, scale)
+    return out.reshape(orig_shape)

@@ -1,0 +1,78 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb runner: measure one cell under config/rules overrides.
+
+    PYTHONPATH=src python -m repro.launch.hillclimb \
+        --arch qwen2_7b --shape train_4k --tag scores_remat --set remat=scores
+"""
+import argparse
+import dataclasses
+import json
+
+from repro.configs.base import get_config
+from repro.launch import dryrun
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--rules", default="baseline")
+    ap.add_argument("--optimizer", default="adamw")
+    ap.add_argument("--galore-dp", action="store_true")
+    ap.add_argument("--set", nargs="*", default=[], help="cfg field overrides k=v")
+    ap.add_argument("--out", default="results/perf.json")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        for cast in (int, float):
+            try:
+                v = cast(v)
+                break
+            except ValueError:
+                continue
+        overrides[k] = v
+
+    base_get = dryrun.get_config
+
+    def patched_get(name, smoke=False):
+        cfg = base_get(name, smoke)
+        if name == args.arch and overrides:
+            cfg = dataclasses.replace(cfg, **overrides)
+        return cfg
+
+    dryrun.get_config = patched_get
+    if args.galore_dp:
+        base_tc = dryrun.default_train_config
+
+        def patched_tc(cfg, optimizer="adamw", galore=True, microbatch=None):
+            tc = base_tc(cfg, optimizer, galore, microbatch)
+            return dataclasses.replace(tc, galore_dp_compress=True, microbatch=0)
+
+        dryrun.default_train_config = patched_tc
+
+    rec = dryrun.run_cell(args.arch, args.shape, multi_pod=False,
+                          rules_name=args.rules, optimizer=args.optimizer)
+    rec["tag"] = args.tag
+    rec["overrides"] = overrides
+    results = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    results[f"{args.arch}|{args.shape}|{args.tag}"] = rec
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=1)
+    r = rec.get("roofline", {})
+    print(f"[hillclimb] {args.tag}: status={rec['status']} "
+          f"peak={rec.get('memory', {}).get('peak_bytes_per_device', 0)/1e9:.2f}GB "
+          f"compute={r.get('compute_s', 0):.3f}s memory={r.get('memory_s', 0):.3f}s "
+          f"collective={r.get('collective_s', 0):.3f}s useful={rec.get('useful_flops_ratio')}")
+
+
+if __name__ == "__main__":
+    main()

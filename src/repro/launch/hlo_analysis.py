@@ -1,0 +1,171 @@
+"""HLO-level analysis for the roofline: collective bytes + depth-scaled costs.
+
+Two facts shape this module (verified empirically on jax 0.8.2 / XLA CPU):
+
+1. `compiled.cost_analysis()` is PER-DEVICE (SPMD-partitioned module) — good —
+   but counts a `while` (lax.scan over layers) body exactly ONCE. A 64-layer
+   scanned stack therefore reports ~1 layer of FLOPs.
+2. HLO text prints collective *results* with shapes but operands without, so
+   operand bytes are recovered from the result shape and the replica-group
+   size (all-gather result = operand × group; reduce-scatter inverse).
+
+Fix for (1): every cell is additionally lowered at reduced depths L₁ = unit
+and L₂ = 2·unit with `scan_unroll=True` (while-free HLO). All depth-linear
+costs (layer compute, layer collectives, optimizer update on stacked params)
+obey  f(L) = base + L·per_layer,  so
+    per_layer = f(L₂) − f(L₁),   total(L) = f(L₁) + (L/unit − 1)·per_layer.
+`unit` is the structural period (jamba: 8, llama4: 4, else 1); enc-dec archs
+scale encoder and decoder depths independently (three lowerings).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVE_KINDS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute",
+)
+
+_INSTR_RE = re.compile(
+    r"=\s+(?P<dtype>[a-z0-9]+)\[(?P<dims>[0-9,]*)\][^ ]*\s+"
+    r"(?P<kind>all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?P<start>-start)?\("
+)
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int]
+    count_by_kind: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    def as_dict(self):
+        return {
+            "bytes_by_kind": dict(self.bytes_by_kind),
+            "count_by_kind": dict(self.count_by_kind),
+            "total_bytes": self.total_bytes,
+        }
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    """Per-device operand bytes of every collective in the (post-opt) HLO."""
+    bytes_by: Dict[str, int] = {k: 0 for k in COLLECTIVE_KINDS}
+    count_by: Dict[str, int] = {k: 0 for k in COLLECTIVE_KINDS}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        kind = m.group("kind")
+        result_bytes = _shape_bytes(m.group("dtype"), m.group("dims"))
+        g = _group_size(line)
+        if kind == "all-gather":
+            operand_bytes = result_bytes // max(g, 1)
+        elif kind == "reduce-scatter":
+            operand_bytes = result_bytes * g
+        else:  # all-reduce / all-to-all / collective-permute: operand == result
+            operand_bytes = result_bytes
+        bytes_by[kind] += operand_bytes
+        count_by[kind] += 1
+    return CollectiveStats(bytes_by, count_by)
+
+
+@dataclasses.dataclass
+class CellCosts:
+    """Depth-scaled per-device costs for one (arch × shape × mesh) cell."""
+
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    collective_by_kind: Dict[str, float]
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def measure(compiled) -> dict:
+    """Raw per-device numbers for one compiled executable."""
+    ca = compiled.cost_analysis() or {}
+    coll = collective_stats(compiled.as_text())
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "collective": coll.as_dict(),
+    }
+
+
+def depth_scale(f1: dict, f2: dict, n_units: int) -> CellCosts:
+    """Linear extrapolation from unit-depth (f1) and 2-unit-depth (f2) costs."""
+
+    def scale(a, b):
+        per_unit = max(b - a, 0.0)
+        return a + per_unit * (n_units - 1)
+
+    by_kind = {}
+    for k in COLLECTIVE_KINDS:
+        a = f1["collective"]["bytes_by_kind"].get(k, 0)
+        b = f2["collective"]["bytes_by_kind"].get(k, 0)
+        by_kind[k] = scale(float(a), float(b))
+    return CellCosts(
+        flops=scale(f1["flops"], f2["flops"]),
+        hbm_bytes=scale(f1["bytes"], f2["bytes"]),
+        collective_bytes=sum(by_kind.values()),
+        collective_by_kind=by_kind,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Roofline terms (TPU v5e)
+# ---------------------------------------------------------------------------
+
+HW = {
+    "peak_flops_bf16": 197e12,  # per chip
+    "hbm_bw": 819e9,  # B/s per chip
+    "ici_bw": 50e9,  # B/s per link
+    "dcn_bw": 25e9,  # B/s per host link (pod axis)
+}
+
+
+def roofline_terms(costs: CellCosts) -> dict:
+    compute_s = costs.flops / HW["peak_flops_bf16"]
+    memory_s = costs.hbm_bytes / HW["hbm_bw"]
+    collective_s = costs.collective_bytes / HW["ici_bw"]
+    terms = {"compute_s": compute_s, "memory_s": memory_s, "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    bound_s = max(terms.values())
+    total = sum(terms.values())
+    return {
+        **terms,
+        "dominant": dominant,
+        "roofline_fraction": (bound_s / total) if total > 0 else 0.0,
+        "step_time_lower_bound_s": bound_s,
+    }

@@ -1,0 +1,97 @@
+"""Production mesh construction + logical-axis sharding rules.
+
+Single pod:  (data=16, model=16)           — 256 chips (TPU v5e pod)
+Multi-pod:   (pod=2, data=16, model=16)    — 512 chips; `pod` maps to DCN and
+                                             carries pure data parallelism.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state — required because smoke tests run with the
+default single CPU device while the dry-run forces 512 host devices.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.utils import ShardingRules
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate 1×1 mesh over whatever devices exist (tests/examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))
+
+
+# ---------------------------------------------------------------------------
+# Logical -> mesh axis rule sets
+# ---------------------------------------------------------------------------
+
+
+def default_rules(mesh, *, long_context: bool = False) -> ShardingRules:
+    """FSDP×TP rules used by the 40-cell baseline.
+
+    Weights: TP dim ("heads_flat"/"ff"/"vocab"/"experts") on `model`, the
+    other large dim ("embed") on `data` (ZeRO-3). Activations: batch on
+    (pod, data). Long-context decode (batch=1) shards the KV-cache sequence
+    axis on `data` instead (context parallelism / flash-decode).
+    """
+    has_pod = "pod" in mesh.shape
+    batch_axes = ("pod", "data") if has_pod else ("data",)
+    rules = {
+        # activations: batch on DP axes, sequence on the model axis.
+        # Sequence parallelism (rather than head sharding) keeps every arch
+        # legal on the fixed 16-way model axis: head counts 12/24/28/40 do
+        # not divide 16, but every cell's seq_len does. GSPMD inserts the
+        # Megatron-SP all-gather/reduce-scatter pairs around each matmul.
+        "batch": batch_axes,
+        "act_seq": "model",
+        # weight dims (2-D FSDP × TP)
+        "embed": "data",  # FSDP dim
+        "ff": "model",
+        "heads_flat": "model",
+        "kv_flat": "model",
+        "vocab": "model",
+        "experts": None,  # expert weights TP-shard their ff dim
+        "moe_cap": None,
+        "layers": None,
+        # optimizer-state dims (see distributed/state_sharding.py)
+        "rank_model": "model",
+        "rank_data": "data",
+        "qblocks": "data",
+        # kv cache: context-sharded at decode (flash-decode semantics)
+        "kv_seq": ("data", "model") if long_context else "model",
+        "kv_heads": None,
+    }
+    if long_context:
+        rules["batch"] = None  # batch=1: shard the context instead
+    return ShardingRules(mesh=mesh, rules=rules)
+
+
+def rules_variant(mesh, name: str, *, long_context: bool = False) -> ShardingRules:
+    """Named sharding-rule variants explored by the §Perf hillclimb."""
+    base = default_rules(mesh, long_context=long_context)
+    rules = dict(base.rules)
+    if name == "baseline":
+        pass
+    elif name == "no_fsdp":  # pure TP: weights replicated across data
+        rules["embed"] = None
+    elif name == "ep":  # expert parallelism: experts on model axis
+        rules["experts"] = "model"
+        rules["ff"] = None
+    elif name == "heads_tp":  # classic Megatron head-TP (divisible archs only)
+        rules["act_seq"] = None
+        rules["kv_heads"] = "model"
+    elif name == "no_seqshard_kv":  # decode without context sharding
+        rules["kv_seq"] = None
+    elif name == "moe_local_dispatch":  # §Perf: replicate seq so MoE routing
+        # is shard-local (kills the per-layer (B/dp, S, D) all-gather that
+        # dominates MoE prefill collectives); model axis still TP-shards ff
+        rules["act_seq"] = None
+    else:
+        raise ValueError(f"unknown rules variant {name!r}")
+    return ShardingRules(mesh=mesh, rules=rules)

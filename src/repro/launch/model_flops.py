@@ -1,0 +1,50 @@
+"""Analytic MODEL_FLOPS = 6·N·D (train) / 2·N·D (inference), N_active for MoE.
+
+The ratio MODEL_FLOPS / HLO_FLOPS exposes remat recompute, MoE dispatch
+overhead and attention FLOPs (the 6ND convention counts parameter FLOPs only),
+per the roofline deliverable.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.configs.base import SHAPES, ModelConfig
+from repro.models import model as M
+from repro.utils import is_axes, path_str, tree_paths
+
+
+def param_counts(cfg: ModelConfig) -> dict:
+    """(total, active) parameter counts; active scales expert weights by K/E."""
+    struct = jax.eval_shape(lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+    axes = M.param_axes(cfg)
+    flat_p = tree_paths(struct)
+    # flatten axes with is_leaf so tuples stay whole (they are pytree nodes)
+    flat_ax, _ = jax.tree_util.tree_flatten_with_path(axes, is_leaf=is_axes)
+    ax_map = {path_str(pth): a for pth, a in flat_ax}
+    total = 0
+    active = 0.0
+    for path, leaf in flat_p:
+        n = int(np.prod(leaf.shape, dtype=np.int64))
+        total += n
+        ax = ax_map.get(path)
+        if ax is not None and "experts" in ax and cfg.n_experts > 0:
+            active += n * (cfg.experts_per_token / cfg.n_experts)
+        else:
+            active += n
+    return {"total": total, "active": active}
+
+
+def model_flops(cfg: ModelConfig, shape_name: str) -> float:
+    """Global analytic FLOPs for one step of the cell."""
+    cell = SHAPES[shape_name]
+    counts = param_counts(cfg)
+    n_active = counts["active"]
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        return 6.0 * n_active * tokens
+    if cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence per step
+    return 2.0 * n_active * cell.global_batch

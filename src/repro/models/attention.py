@@ -1,0 +1,191 @@
+"""GQA attention with KV cache, chunked-local masks, RoPE/M-RoPE, cross-attn.
+
+Supports:
+  * grouped-query attention (n_kv_heads <= n_heads), MQA (kv=1)
+  * causal, bidirectional (encoder), and chunked-local (iRoPE / Llama-4) masks
+  * single-token decode against a (possibly context-sharded) KV cache; chunked
+    layers slice a static-size window of the cache so 500k decode stays O(chunk)
+  * cross attention (whisper decoder) with precomputed encoder K/V
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import rope as rope_lib
+from repro.models.layers import _init_normal
+from repro.utils import logical_constraint
+
+NEG_INF = -2.3819763e38  # large negative for bf16-safe masking (applied in f32)
+
+
+def init_attention(key, cfg, dtype, cross: bool = False):
+    hd = cfg.resolved_head_dim
+    keys = jax.random.split(key, 4)
+    p = {
+        "wq": _init_normal(keys[0], (cfg.d_model, cfg.n_heads * hd), dtype, fan_in=cfg.d_model),
+        "wk": _init_normal(keys[1], (cfg.d_model, cfg.n_kv_heads * hd), dtype, fan_in=cfg.d_model),
+        "wv": _init_normal(keys[2], (cfg.d_model, cfg.n_kv_heads * hd), dtype, fan_in=cfg.d_model),
+        "wo": _init_normal(keys[3], (cfg.n_heads * hd, cfg.d_model), dtype, fan_in=cfg.n_heads * hd),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+    return p
+
+
+def attention_axes(cfg, cross: bool = False):
+    ax = {
+        "wq": ("embed", "heads_flat"),
+        "wk": ("embed", "kv_flat"),
+        "wv": ("embed", "kv_flat"),
+        "wo": ("heads_flat", "embed"),
+    }
+    if cfg.qkv_bias and not cross:
+        ax["bq"] = ("heads_flat",)
+        ax["bk"] = ("kv_flat",)
+        ax["bv"] = ("kv_flat",)
+    return ax
+
+
+def _proj(x, w, b, n_heads, hd):
+    y = jnp.einsum("bsd,df->bsf", x, w)
+    if b is not None:
+        y = y + b
+    return y.reshape(x.shape[0], x.shape[1], n_heads, hd)
+
+
+def _gqa_scores(q, k):
+    """q (B,S,K,G,hd), k (B,T,K,hd) -> (B,K,G,S,T) f32."""
+    from jax.ad_checkpoint import checkpoint_name
+
+    s = jnp.einsum("bskgh,btkh->bkgst", q, k, preferred_element_type=jnp.float32)
+    return checkpoint_name(s, "attn_scores")
+
+
+def _gqa_out(probs, v):
+    """probs (B,K,G,S,T), v (B,T,K,hd) -> (B,S,K,G,hd)."""
+    return jnp.einsum("bkgst,btkh->bskgh", probs.astype(v.dtype), v)
+
+
+def _masked_softmax(scores, mask):
+    from jax.ad_checkpoint import checkpoint_name
+
+    scores = checkpoint_name(jnp.where(mask, scores, NEG_INF), "attn_scores")
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    unnorm = jnp.exp(scores - jax.lax.stop_gradient(m))
+    denom = jnp.sum(unnorm, axis=-1, keepdims=True)
+    return checkpoint_name(unnorm / denom, "attn_probs")
+
+
+def _train_mask(seq_q: int, seq_k: int, causal: bool, chunk: int, q_offset: int = 0):
+    qi = jnp.arange(seq_q)[:, None] + q_offset
+    kj = jnp.arange(seq_k)[None, :]
+    mask = jnp.ones((seq_q, seq_k), bool)
+    if causal:
+        mask &= kj <= qi
+    if chunk > 0:
+        mask &= (qi // chunk) == (kj // chunk)
+    return mask  # (S, T)
+
+
+def attend(
+    cfg,
+    p,
+    x,
+    *,
+    angles=None,
+    causal: bool = True,
+    chunk: int = 0,
+    cache: Optional[dict] = None,
+    cache_pos=None,
+    kv_override: Optional[tuple] = None,
+):
+    """General attention entry point.
+
+    x: (B, S, D). If `cache` is given and S == 1 this is a decode step: K/V are
+    written at `cache_pos` (scalar int32) and attention runs over the cache.
+    `kv_override=(k, v)` serves cross-attention (encoder K/V).
+    Returns (out, new_cache).
+    """
+    B, S, D = x.shape
+    hd = cfg.resolved_head_dim
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    G = H // KV
+
+    from jax.ad_checkpoint import checkpoint_name
+
+    q = _proj(x, p["wq"], p.get("bq"), H, hd)
+    if kv_override is None:
+        k = _proj(x, p["wk"], p.get("bk"), KV, hd)
+        v = _proj(x, p["wv"], p.get("bv"), KV, hd)
+        if angles is not None:
+            q = rope_lib.apply_rotary(q, angles)
+            k = rope_lib.apply_rotary(k, angles)
+        q = checkpoint_name(q, "save_q")
+        k = checkpoint_name(k, "save_k")
+        v = checkpoint_name(v, "save_v")
+    else:
+        k, v = kv_override
+        # cross-attention: no rope on q either (whisper uses learned abs pos)
+    q = logical_constraint(q, "batch", None, "kv_heads", None) if G == 1 else q
+    q = q.reshape(B, S, KV, G, hd) * (hd ** -0.5)
+
+    new_cache = cache
+    if cache is not None and kv_override is None:
+        if S == 1:
+            # decode: write this token's K/V into the cache
+            k_cache = jax.lax.dynamic_update_slice(cache["k"], k, (0, cache_pos, 0, 0))
+            v_cache = jax.lax.dynamic_update_slice(cache["v"], v, (0, cache_pos, 0, 0))
+            new_cache = {"k": k_cache, "v": v_cache}
+            if chunk > 0:
+                # static-size window: the chunk containing cache_pos
+                start = (cache_pos // chunk) * chunk
+                k_att = jax.lax.dynamic_slice(
+                    k_cache, (0, start, 0, 0), (B, chunk, KV, hd)
+                )
+                v_att = jax.lax.dynamic_slice(
+                    v_cache, (0, start, 0, 0), (B, chunk, KV, hd)
+                )
+                valid = (jnp.arange(chunk) + start) <= cache_pos
+            else:
+                k_att, v_att = k_cache, v_cache
+                valid = jnp.arange(k_cache.shape[1]) <= cache_pos
+            scores = _gqa_scores(q, k_att)
+            probs = _masked_softmax(scores, valid[None, None, None, None, :])
+            out = _gqa_out(probs, v_att)
+        else:
+            # prefill: write the whole prefix, attend within it
+            k_cache = jax.lax.dynamic_update_slice(cache["k"], k, (0, 0, 0, 0))
+            v_cache = jax.lax.dynamic_update_slice(cache["v"], v, (0, 0, 0, 0))
+            new_cache = {"k": k_cache, "v": v_cache}
+            mask = _train_mask(S, S, causal, chunk)
+            scores = _gqa_scores(q, k)
+            probs = _masked_softmax(scores, mask[None, None, None])
+            out = _gqa_out(probs, v)
+    else:
+        T = k.shape[1]
+        mask = _train_mask(S, T, causal and kv_override is None, chunk)
+        scores = _gqa_scores(q, k)
+        probs = _masked_softmax(scores, mask[None, None, None])
+        out = _gqa_out(probs, v)
+
+    out = out.reshape(B, S, H * hd)
+    out = checkpoint_name(out, "save_attn_ctx")
+    out = jnp.einsum("bsf,fd->bsd", out, p["wo"])
+    return out, new_cache
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype):
+    """Per-layer KV cache buffers; logical axes allow context sharding."""
+    hd = cfg.resolved_head_dim
+    shape = (batch, max_len, cfg.n_kv_heads, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def cache_axes():
+    spec = ("batch", "kv_seq", "kv_heads", None)
+    return {"k": spec, "v": spec}

@@ -1,0 +1,140 @@
+"""Primitive layers: norms, dense projections, embeddings, MLPs.
+
+Functional style: params are plain dicts of jnp arrays; every init_* function
+returns (params, logical_axes) where logical_axes mirrors the params structure
+with tuples of logical axis names used by the sharding rules.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import canonical_dtype, logical_constraint
+
+
+def _init_normal(key, shape, dtype, fan_in=None):
+    scale = (fan_in or shape[0]) ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(cfg, dtype):
+    if cfg.norm_type == "layernorm":
+        return {"scale": jnp.ones((cfg.d_model,), dtype), "bias": jnp.zeros((cfg.d_model,), dtype)}
+    return {"scale": jnp.ones((cfg.d_model,), dtype)}
+
+
+def norm_axes(cfg):
+    if cfg.norm_type == "layernorm":
+        return {"scale": ("embed",), "bias": ("embed",)}
+    return {"scale": ("embed",)}
+
+
+def apply_norm(cfg, p, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "layernorm":
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mean), axis=-1, keepdims=True)
+        out = (xf - mean) * jax.lax.rsqrt(var + eps)
+        out = out * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense / embedding
+# ---------------------------------------------------------------------------
+
+
+def init_dense(key, d_in, d_out, dtype, bias=False):
+    p = {"kernel": _init_normal(key, (d_in, d_out), dtype, fan_in=d_in)}
+    if bias:
+        p["bias"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense_axes(bias=False, axes=("embed", "ff")):
+    ax = {"kernel": axes}
+    if bias:
+        ax["bias"] = (axes[1],)
+    return ax
+
+
+def apply_dense(p, x):
+    y = jnp.einsum("...d,df->...f", x, p["kernel"])
+    if "bias" in p:
+        y = y + p["bias"]
+    return y
+
+
+def init_embedding(key, vocab, d_model, dtype):
+    return {"embedding": _init_normal(key, (vocab, d_model), jnp.float32, fan_in=d_model).astype(dtype)}
+
+
+def embedding_axes():
+    # vocab-sharded only: a 2-D-sharded table turns the token gather into
+    # full-activation reshards (measured on the dry-run mesh); the table is
+    # small relative to activations once vocab is 16-way sharded.
+    return {"embedding": ("vocab", None)}
+
+
+def apply_embedding(p, tokens):
+    return jnp.take(p["embedding"], tokens, axis=0)
+
+
+def apply_unembed(p, x, softcap: float = 0.0, valid_vocab: int = 0):
+    """Logits; tied embedding head. Pad-vocab columns are masked to -inf."""
+    logits = jnp.einsum("...d,vd->...v", x, p["embedding"]).astype(jnp.float32)
+    if softcap > 0:
+        logits = jnp.tanh(logits / softcap) * softcap
+    padded = p["embedding"].shape[0]
+    if valid_vocab and valid_vocab < padded:
+        col = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+        logits = jnp.where(col < valid_vocab, logits, -1e30)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GeLU)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg, dtype, d_ff=None):
+    d_ff = d_ff or cfg.d_ff
+    keys = jax.random.split(key, 3)
+    if cfg.act == "swiglu":
+        return {
+            "gate": _init_normal(keys[0], (cfg.d_model, d_ff), dtype, fan_in=cfg.d_model),
+            "up": _init_normal(keys[1], (cfg.d_model, d_ff), dtype, fan_in=cfg.d_model),
+            "down": _init_normal(keys[2], (d_ff, cfg.d_model), dtype, fan_in=d_ff),
+        }
+    return {
+        "up": _init_normal(keys[1], (cfg.d_model, d_ff), dtype, fan_in=cfg.d_model),
+        "down": _init_normal(keys[2], (d_ff, cfg.d_model), dtype, fan_in=d_ff),
+    }
+
+
+def mlp_axes(cfg):
+    if cfg.act == "swiglu":
+        return {"gate": ("embed", "ff"), "up": ("embed", "ff"), "down": ("ff", "embed")}
+    return {"up": ("embed", "ff"), "down": ("ff", "embed")}
+
+
+def apply_mlp(cfg, p, x):
+    from jax.ad_checkpoint import checkpoint_name
+
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(jnp.einsum("...d,df->...f", x, p["gate"])) * jnp.einsum(
+            "...d,df->...f", x, p["up"]
+        )
+    else:
+        h = jax.nn.gelu(jnp.einsum("...d,df->...f", x, p["up"]))
+    h = logical_constraint(h, "batch", None, "ff")
+    h = checkpoint_name(h, "save_ffn_hidden")
+    return jnp.einsum("...f,fd->...d", h, p["down"])

@@ -1,0 +1,278 @@
+"""Top-level model: init / forward / loss / cache for every assigned family.
+
+Families
+  dense | moe | vlm  -> token decoder (vlm mixes in stubbed patch embeddings)
+  ssm                -> mamba2 stack (attention-free)
+  hybrid             -> jamba blocks
+  audio              -> whisper enc-dec (stubbed conv frontend: precomputed
+                        frame embeddings arrive via the batch)
+
+Batch keys (all optional except tokens):
+  tokens   (B, S) int32          targets (B, S) int32
+  positions (B,S) / (3,B,S)      media   (B, M, D) precomputed patch embeds
+  enc_frames (B, enc_seq, D)     loss_mask (B, S)
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models import rope as rope_lib
+from repro.models import ssm as ssm_lib
+from repro.models import stacks
+from repro.models.layers import (
+    apply_embedding,
+    apply_norm,
+    apply_unembed,
+    embedding_axes,
+    init_embedding,
+    init_norm,
+    norm_axes,
+)
+from repro.utils import canonical_dtype, logical_constraint
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg, key):
+    dtype = canonical_dtype(cfg.dtype)
+    keys = jax.random.split(key, 4)
+    p = {
+        "embed": init_embedding(keys[0], cfg.padded_vocab, cfg.d_model, dtype),
+        "final_norm": init_norm(cfg, dtype),
+    }
+    if cfg.family == "hybrid":
+        p["blocks"] = stacks.init_jamba_stack(keys[1], cfg, dtype)
+    elif cfg.family == "ssm":
+        p["blocks"] = _init_ssm_stack(keys[1], cfg, dtype)
+    elif cfg.family == "audio":
+        p["encoder"] = stacks.init_encoder_stack(keys[1], cfg, dtype)
+        p["enc_norm"] = init_norm(cfg, dtype)
+        p["blocks"] = stacks.init_crossdecoder_stack(keys[2], cfg, dtype)
+        p["dec_pos"] = jnp.zeros((8192, cfg.d_model), dtype)  # learned decoder positions
+    else:  # dense | moe | vlm
+        p["blocks"] = stacks.init_decoder_stack(keys[1], cfg, dtype)
+    return p
+
+
+def param_axes(cfg):
+    ax = {
+        "embed": embedding_axes(),
+        "final_norm": norm_axes(cfg),
+    }
+    if cfg.family == "hybrid":
+        ax["blocks"] = stacks.jamba_stack_axes(cfg)
+    elif cfg.family == "ssm":
+        ax["blocks"] = _ssm_stack_axes(cfg)
+    elif cfg.family == "audio":
+        ax["encoder"] = stacks.encoder_stack_axes(cfg)
+        ax["enc_norm"] = norm_axes(cfg)
+        ax["blocks"] = stacks.crossdecoder_stack_axes(cfg)
+        ax["dec_pos"] = (None, None)
+    else:
+        ax["blocks"] = stacks.decoder_stack_axes(cfg)
+    return ax
+
+
+def _init_ssm_stack(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "mix": stacks._stack_init(lambda k: ssm_lib.init_ssm(k, cfg, dtype), k1, cfg.n_layers),
+        "ln": stacks._stack_init(lambda k: init_norm(cfg, dtype), k2, cfg.n_layers),
+    }
+
+
+def _ssm_stack_axes(cfg):
+    return {
+        "mix": stacks._stack_axes(ssm_lib.ssm_axes(cfg)),
+        "ln": stacks._stack_axes(norm_axes(cfg)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg, batch: int, max_len: int):
+    dtype = canonical_dtype(cfg.dtype)
+    if cfg.family == "hybrid":
+        return stacks.init_jamba_cache(cfg, batch, max_len, dtype)
+    if cfg.family == "ssm":
+        one = ssm_lib.init_ssm_cache(cfg, batch, dtype)
+        return jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (cfg.n_layers,) + x.shape), one
+        )
+    one = attn_lib.init_cache(cfg, batch, max_len, dtype)
+    stacked = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.n_layers,) + x.shape), one
+    )
+    if cfg.family == "audio":
+        # decode against the encoder also needs per-layer cross K/V
+        hd = cfg.resolved_head_dim
+        xkv = jnp.zeros((cfg.n_layers, batch, cfg.enc_seq, cfg.n_kv_heads, hd), dtype)
+        return {"self": stacked, "cross_k": xkv, "cross_v": xkv}
+    return stacked
+
+
+def cache_axes(cfg):
+    if cfg.family == "hybrid":
+        return stacks.jamba_cache_axes(cfg)
+    if cfg.family == "ssm":
+        return stacks._stack_axes(ssm_lib.ssm_cache_axes())
+    stacked = stacks._stack_axes(attn_lib.cache_axes())
+    if cfg.family == "audio":
+        xspec = ("layers", "batch", None, "kv_heads", None)
+        return {"self": stacked, "cross_k": xspec, "cross_v": xspec}
+    return stacked
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _angles(cfg, positions, seq, batch, offset=0):
+    if cfg.rope_style == "none" or cfg.family in ("ssm", "audio"):
+        return None
+    hd = cfg.resolved_head_dim
+    if positions is None:
+        positions = rope_lib.positions_for(cfg, batch, seq, offset)
+    if cfg.rope_style == "mrope":
+        return rope_lib.mrope_angles(positions, hd, cfg.rope_theta, cfg.mrope_sections)
+    return rope_lib.rope_angles(positions, hd, cfg.rope_theta)
+
+
+def _embed_inputs(cfg, params, batch_dict):
+    x = apply_embedding(params["embed"], batch_dict["tokens"])
+    media = batch_dict.get("media")
+    if media is not None and cfg.media_embeds > 0:
+        # stubbed frontend: first M positions carry precomputed media embeddings
+        M = media.shape[1]
+        x = jnp.concatenate([media.astype(x.dtype), x[:, M:]], axis=1)
+    return x
+
+
+def forward(cfg, params, batch_dict, *, cache=None, cache_pos=None):
+    """Returns (logits, aux_loss, new_cache).
+
+    Train/prefill: tokens (B, S).  Decode: tokens (B, 1) + cache + cache_pos.
+    """
+    tokens = batch_dict["tokens"]
+    B, S = tokens.shape
+    positions = batch_dict.get("positions")
+
+    if cfg.family == "audio":
+        return _forward_audio(cfg, params, batch_dict, cache=cache, cache_pos=cache_pos)
+
+    x = _embed_inputs(cfg, params, batch_dict)
+    x = logical_constraint(x, "batch", "act_seq", None)
+    offset = 0 if cache_pos is None else cache_pos
+    angles = _angles(cfg, positions, S, B, offset)
+
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family == "hybrid":
+        x, new_cache, aux = stacks.apply_jamba_stack(
+            cfg, params["blocks"], x, angles=angles, cache=cache, cache_pos=cache_pos
+        )
+    elif cfg.family == "ssm":
+        x, new_cache = _apply_ssm_stack(cfg, params["blocks"], x, cache, cache_pos)
+    else:
+        x, new_cache, aux = stacks.apply_decoder_stack(
+            cfg, params["blocks"], x, angles=angles, cache=cache, cache_pos=cache_pos
+        )
+
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = apply_unembed(params["embed"], x, cfg.logit_softcap, valid_vocab=cfg.vocab_size)
+    logits = logical_constraint(logits, "batch", "act_seq", "vocab")
+    return logits, aux, new_cache
+
+
+def _apply_ssm_stack(cfg, p, x, cache, cache_pos):
+    def body(carry, scanned):
+        (x,) = carry
+        layer_p, layer_cache = scanned
+        if cache is None:
+            layer_cache = None
+        h = apply_norm(cfg, layer_p["ln"], x)
+        out, new_c = ssm_lib.apply_ssm(cfg, layer_p["mix"], h, layer_cache, cache_pos)
+        x = x + out
+        x = logical_constraint(x, "batch", "act_seq", None)
+        return (x,), (new_c if cache is not None else 0)
+
+    body = stacks._remat_wrap(cfg, body)
+    dummy = cache if cache is not None else jnp.zeros((cfg.n_layers,))
+    (x,), new_cache = jax.lax.scan(
+        body, (x,), (p, dummy), unroll=cfg.n_layers if cfg.scan_unroll else 1
+    )
+    return x, (new_cache if cache is not None else None)
+
+
+def _forward_audio(cfg, params, batch_dict, *, cache=None, cache_pos=None):
+    tokens = batch_dict["tokens"]
+    B, S = tokens.shape
+    dec_in = apply_embedding(params["embed"], tokens)
+    pos0 = 0 if cache_pos is None else cache_pos
+    pos_emb = jax.lax.dynamic_slice(params["dec_pos"], (pos0, 0), (S, cfg.d_model))
+    dec_in = dec_in + pos_emb[None]
+
+    if cache is not None and "enc_frames" not in batch_dict:
+        # decode: cross K/V already cached
+        enc_kv = (cache["cross_k"], cache["cross_v"])
+        x, new_self = stacks.apply_crossdecoder_stack(
+            cfg, params["blocks"], dec_in, enc_kv, cache=cache["self"], cache_pos=cache_pos
+        )
+        new_cache = {"self": new_self, "cross_k": cache["cross_k"], "cross_v": cache["cross_v"]}
+    else:
+        frames = batch_dict["enc_frames"]  # stubbed conv frontend output
+        enc = stacks.apply_encoder_stack(cfg, params["encoder"], frames)
+        enc = apply_norm(cfg, params["enc_norm"], enc)
+        enc_kv = stacks.compute_enc_kv(cfg, params["blocks"], enc)
+        x, new_self = stacks.apply_crossdecoder_stack(
+            cfg, params["blocks"], dec_in, enc_kv,
+            cache=None if cache is None else cache["self"],
+            cache_pos=cache_pos,
+        )
+        new_cache = None
+        if cache is not None:
+            new_cache = {"self": new_self, "cross_k": enc_kv[0], "cross_v": enc_kv[1]}
+
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = apply_unembed(params["embed"], x, cfg.logit_softcap, valid_vocab=cfg.vocab_size)
+    return logits, jnp.zeros((), jnp.float32), new_cache
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(cfg, params, batch_dict, z_loss: float = 0.0):
+    """Next-token cross entropy. Returns (loss, metrics)."""
+    logits, aux, _ = forward(cfg, params, batch_dict)
+    targets = batch_dict.get("targets")
+    if targets is None:
+        targets = jnp.concatenate(
+            [batch_dict["tokens"][:, 1:], batch_dict["tokens"][:, -1:]], axis=1
+        )
+    mask = batch_dict.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones(targets.shape, jnp.float32)
+
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    tgt_logit = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = (logz - tgt_logit) * mask
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(nll) / denom
+    total = loss + aux
+    if z_loss > 0:
+        total = total + z_loss * jnp.sum(jnp.square(logz) * mask) / denom
+    metrics = {"loss": loss, "aux_loss": aux, "ppl_proxy": jnp.exp(jnp.minimum(loss, 20.0))}
+    return total, metrics

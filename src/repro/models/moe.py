@@ -1,0 +1,144 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch (drop policy).
+
+Design notes (see DESIGN.md §4):
+  * Routing/dispatch is computed per batch row; the batch axis is the sharded
+    axis, so every gather/scatter below is shard-local under GSPMD — no
+    surprise cross-device collectives and no giant one-hot dispatch einsums.
+  * FLOPs ≈ tokens × top_k × capacity_factor × expert-FFN FLOPs, i.e. the
+    *active* compute, unlike dense-all-experts formulations (E/k× waste).
+  * Expert weights are stacked (E, d, f); tensor-parallelism shards the ff dim
+    (works for any expert count); an "ep" rule may shard E when divisible.
+  * Tokens beyond an expert's capacity are dropped (their combine weight is
+    zeroed) — standard GShard/Switch behaviour; the router aux loss keeps load
+    balanced so drops stay rare.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _init_normal
+from repro.utils import logical_constraint
+
+
+def init_moe(key, cfg, dtype):
+    E, D, F = cfg.n_experts, cfg.d_model, cfg.d_ff
+    keys = jax.random.split(key, 4)
+    p = {
+        "router": _init_normal(keys[0], (D, E), jnp.float32, fan_in=D),
+        "gate": _init_normal(keys[1], (E, D, F), dtype, fan_in=D),
+        "up": _init_normal(keys[2], (E, D, F), dtype, fan_in=D),
+        "down": _init_normal(keys[3], (E, F, D), dtype, fan_in=F),
+    }
+    return p
+
+
+def moe_axes(cfg):
+    return {
+        "router": ("embed", None),
+        "gate": ("experts", "embed", "ff"),
+        "up": ("experts", "embed", "ff"),
+        "down": ("experts", "ff", "embed"),
+    }
+
+
+def capacity_for(cfg, seq: int) -> int:
+    per_expert = seq * cfg.experts_per_token / cfg.n_experts
+    return max(1, int(per_expert * cfg.capacity_factor))
+
+
+@jax.custom_vjp
+def _permute(x, idx_fwd, idx_bwd, scale_fwd, scale_bwd):
+    """Batched permutation as a gather with a gather adjoint (NO scatter).
+
+    y[b, i] = x[b, idx_fwd[b, i]] * scale_fwd[b, i]
+    adjoint: dx[b, j] = dy[b, idx_bwd[b, j]] * scale_bwd[b, j]
+
+    Caller must supply exact inverse index/scale pairs (drops → scale 0).
+    XLA SPMD cannot batch-partition scatter (it replicates operands at global
+    batch — measured 64 GB u32 index tensors on grok-314b), but partitions
+    batched gathers cleanly; expressing both directions as gathers keeps the
+    whole MoE dispatch shard-local under GSPMD.
+    """
+    return jnp.take_along_axis(x, idx_fwd[..., None], axis=1) * scale_fwd[..., None]
+
+
+def _permute_fwd(x, idx_fwd, idx_bwd, scale_fwd, scale_bwd):
+    return _permute(x, idx_fwd, idx_bwd, scale_fwd, scale_bwd), (idx_bwd, scale_bwd)
+
+
+def _permute_bwd(res, dy):
+    idx_bwd, scale_bwd = res
+    dx = jnp.take_along_axis(dy, idx_bwd[..., None], axis=1) * scale_bwd[..., None]
+    return dx, None, None, None, None
+
+
+_permute.defvjp(_permute_fwd, _permute_bwd)
+
+
+def apply_moe(cfg, p, x):
+    """x: (B, S, D) -> (y, aux_loss). Sort-based capacity dispatch, gather-only."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.experts_per_token
+    C = capacity_for(cfg, S)
+    T = S * K
+
+    router_logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(router_logits, axis=-1)  # (B,S,E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)  # (B,S,K)
+    if K > 1:
+        gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # --- load-balance aux loss (Switch-style) ---
+    me = jnp.mean(probs, axis=(0, 1))  # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(expert_idx, E, dtype=jnp.float32), axis=2), axis=(0, 1)
+    )  # fraction of tokens per expert
+    aux_loss = E * jnp.sum(me * ce) * cfg.router_aux_coef
+
+    # --- routing (integer index algebra only; no gradients flow here) ---
+    flat_ids = expert_idx.reshape(B, T)  # copy t = s*K + k
+    order = jnp.argsort(flat_ids, axis=1, stable=True)  # sorted-pos -> copy
+    sorted_ids = jnp.take_along_axis(flat_ids, order, axis=1)
+    counts = jnp.sum(jax.nn.one_hot(flat_ids, E, dtype=jnp.int32), axis=1)  # (B,E)
+    offsets = jnp.cumsum(counts, axis=1) - counts  # exclusive cumsum (B,E)
+    pos_in_expert = jnp.arange(T)[None, :] - jnp.take_along_axis(offsets, sorted_ids, axis=1)
+    keep_sorted = pos_in_expert < C
+    # capacity slot of each sorted position (dropped -> parked at slot 0, scale 0)
+    slot_sorted = jnp.where(keep_sorted, sorted_ids * C + pos_in_expert, 0)
+    # copy -> slot (flat order) and copy keep flag
+    inv_order = jnp.argsort(order, axis=1)  # copy -> sorted-pos
+    slot_of_copy = jnp.take_along_axis(slot_sorted, inv_order, axis=1)  # (B,T)
+    keep_of_copy = jnp.take_along_axis(keep_sorted, inv_order, axis=1)
+    # slot -> copy (inverse direction): slot (e,c) holds sorted-pos offsets[e]+c
+    ec = jnp.arange(E * C)
+    s_idx = jnp.take_along_axis(offsets, (ec[None, :] // C), axis=1) + (ec % C)[None, :]
+    slot_filled = (ec % C)[None, :] < jnp.take_along_axis(counts, ec[None, :] // C, axis=1)
+    s_idx = jnp.clip(s_idx, 0, T - 1)
+    copy_of_slot = jnp.take_along_axis(order, s_idx, axis=1)  # (B, E*C)
+
+    f32 = jnp.float32
+    fill = slot_filled.astype(f32)
+    keepf = keep_of_copy.astype(f32)
+
+    # --- dispatch: replicate tokens to copies (reshape adjoint = sum over K) ---
+    x_copies = jnp.repeat(x, K, axis=1) if K > 1 else x  # (B, T, D)
+    # h[b, j] = x_copies[b, copy_of_slot[b, j]]  (gather); adjoint gathers back
+    h = _permute(x_copies, copy_of_slot, slot_of_copy,
+                 fill.astype(x.dtype), keepf.astype(x.dtype))
+    h = h.reshape(B, E, C, D)
+    h = logical_constraint(h, "batch", "experts", None, None)
+
+    # --- expert FFN (SwiGLU) ---
+    gate_h = jax.nn.silu(jnp.einsum("becd,edf->becf", h, p["gate"]))
+    up_h = jnp.einsum("becd,edf->becf", h, p["up"])
+    inner = logical_constraint(gate_h * up_h, "batch", "experts", None, "ff")
+    y = jnp.einsum("becf,efd->becd", inner, p["down"])  # (B,E,C,D)
+
+    # --- combine: gather each copy's expert output, weight by gate, sum K ---
+    y_flat = y.reshape(B, E * C, D)
+    tok = _permute(y_flat, slot_of_copy, copy_of_slot,
+                   keepf.astype(y.dtype), fill.astype(y.dtype))  # (B,T,D)
+    gates = gate_vals.reshape(B, S, K).astype(y.dtype)
+    out = jnp.einsum("bskd,bsk->bsd", tok.reshape(B, S, K, D), gates)
+    return out.astype(x.dtype), aux_loss

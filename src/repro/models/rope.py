@@ -1,0 +1,54 @@
+"""Rotary position embeddings: standard RoPE and multimodal M-RoPE (Qwen2-VL).
+
+M-RoPE splits the head_dim/2 frequency slots into (temporal, height, width)
+sections; each section consumes the corresponding row of a (3, B, S) position
+tensor. For pure-text positions all three rows are equal, which makes M-RoPE
+collapse to standard RoPE (the Qwen2-VL property).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def rope_angles(positions: jnp.ndarray, head_dim: int, theta: float) -> jnp.ndarray:
+    """positions (B, S) -> angles (B, S, head_dim//2)."""
+    inv = _freqs(head_dim, theta)
+    return positions.astype(jnp.float32)[..., None] * inv
+
+
+def mrope_angles(positions: jnp.ndarray, head_dim: int, theta: float, sections) -> jnp.ndarray:
+    """positions (3, B, S) -> angles (B, S, head_dim//2) with t/h/w sections."""
+    inv = _freqs(head_dim, theta)
+    half = head_dim // 2
+    assert sum(sections) == half, f"mrope sections {sections} must sum to {half}"
+    section_id = jnp.repeat(
+        jnp.arange(len(sections)), jnp.asarray(sections), total_repeat_length=half
+    )
+    # (3, B, S, half) -> select per-slot section
+    all_angles = positions.astype(jnp.float32)[..., None] * inv  # (3, B, S, half)
+    return jnp.take_along_axis(
+        all_angles, section_id[None, None, :].astype(jnp.int32)[None], axis=0
+    )[0]
+
+
+def apply_rotary(x: jnp.ndarray, angles: jnp.ndarray) -> jnp.ndarray:
+    """x (B, S, H, D), angles (B, S, D//2) -> rotated x (interleaved-half style)."""
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    cos = jnp.cos(angles)[..., None, :].astype(x.dtype)  # (B, S, 1, D//2)
+    sin = jnp.sin(angles)[..., None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def positions_for(cfg, batch: int, seq: int, offset=0):
+    """Default position ids. Returns (B, S) for rope, (3, B, S) for mrope."""
+    pos = jnp.arange(seq, dtype=jnp.int32)[None, :] + offset
+    pos = jnp.broadcast_to(pos, (batch, seq))
+    if cfg.rope_style == "mrope":
+        return jnp.broadcast_to(pos[None], (3, batch, seq))
+    return pos

@@ -1,0 +1,410 @@
+"""Layer stacks: scan-based decoder, Jamba hybrid blocks, Whisper enc-dec.
+
+All stacks scan over stacked per-layer params (leading L axis) so the HLO stays
+O(1) in depth — essential for compiling 64–72-layer archs on the dry-run host.
+Per-layer structural differences (iRoPE full-attention layers, MoE cadence)
+are expressed as scanned flag vectors + `lax.cond`, keeping the scan body
+homogeneous.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import apply_mlp, apply_norm, init_mlp, init_norm, mlp_axes, norm_axes
+from repro.utils import is_axes, logical_constraint
+
+
+def _remat_wrap(cfg, body):
+    """Activation-checkpoint policies for scan bodies.
+
+    "full":   recompute everything (lowest memory, +1 forward of FLOPs)
+    "scores": save every intermediate EXCEPT the O(S·T) attention scores/probs
+              — flash-attention-style recompute; with sequence-parallel
+              activations the saved set is ~150 MB/layer/device, while the
+              backward only re-runs the QKᵀ matmul + softmax (§Perf)
+    """
+    if cfg.remat == "full":
+        return jax.checkpoint(body)
+    if cfg.remat == "scores":
+        policy = jax.checkpoint_policies.save_anything_except_these_names(
+            "attn_scores", "attn_probs"
+        )
+        return jax.checkpoint(body, policy=policy)
+    if cfg.remat == "names":
+        # explicit whitelist: per-layer projections + ffn hidden are saved
+        # (~150 MB/layer/device under sequence parallelism); everything else —
+        # including the O(S·T) attention scores and the CPU-backend f32
+        # weight upcasts — is recomputed in backward
+        policy = jax.checkpoint_policies.save_only_these_names(
+            "save_q", "save_k", "save_v", "save_attn_ctx", "save_ffn_hidden"
+        )
+        return jax.checkpoint(body, policy=policy)
+    return body
+
+
+def _stack_init(fn, key, n):
+    """vmap an init function over n split keys -> stacked params (leading n)."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(fn)(keys)
+
+
+def _stack_axes(ax_tree):
+    """Prefix every axes tuple with the stacked 'layers' dim (replicated)."""
+    return jax.tree_util.tree_map(
+        lambda t: ("layers",) + tuple(t), ax_tree, is_leaf=is_axes
+    )
+
+
+# ---------------------------------------------------------------------------
+# Homogeneous decoder stack (dense / MoE / iRoPE mixes)
+# ---------------------------------------------------------------------------
+
+
+def init_decoder_stack(key, cfg, dtype):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    L = cfg.n_layers
+    p = {
+        "attn": _stack_init(lambda k: attn_lib.init_attention(k, cfg, dtype), k1, L),
+        "ln1": _stack_init(lambda k: init_norm(cfg, dtype), k2, L),
+        "ln2": _stack_init(lambda k: init_norm(cfg, dtype), k3, L),
+    }
+    if cfg.n_experts > 0:
+        p["ffn"] = _stack_init(lambda k: moe_lib.init_moe(k, cfg, dtype), k4, L)
+    else:
+        p["ffn"] = _stack_init(lambda k: init_mlp(k, cfg, dtype), k4, L)
+    return p
+
+
+def decoder_stack_axes(cfg):
+    ffn_ax = moe_lib.moe_axes(cfg) if cfg.n_experts > 0 else mlp_axes(cfg)
+    return {
+        "attn": _stack_axes(attn_lib.attention_axes(cfg)),
+        "ln1": _stack_axes(norm_axes(cfg)),
+        "ln2": _stack_axes(norm_axes(cfg)),
+        "ffn": _stack_axes(ffn_ax),
+    }
+
+
+def _decoder_layer(cfg, p, x, *, angles, is_full: bool, cache, cache_pos, causal=True):
+    """is_full is a STATIC python bool (iRoPE: global rope-free vs chunked).
+
+    Static dispatch matters at scale: `lax.cond` branch costs are summed by
+    the cost model and GSPMD replicates tensors inside conditional branches —
+    the group-scan below keeps the per-layer structure static instead."""
+    h = apply_norm(cfg, p["ln1"], x)
+    chunk = cfg.attention_chunk
+    if chunk > 0 and is_full:
+        attn_out, new_cache = attn_lib.attend(
+            cfg, p["attn"], h, angles=None, causal=causal, chunk=0,
+            cache=cache, cache_pos=cache_pos,
+        )
+    else:
+        attn_out, new_cache = attn_lib.attend(
+            cfg, p["attn"], h, angles=angles, causal=causal, chunk=chunk,
+            cache=cache, cache_pos=cache_pos,
+        )
+    x = x + attn_out
+    h = apply_norm(cfg, p["ln2"], x)
+    if cfg.n_experts > 0:
+        ffn_out, aux = moe_lib.apply_moe(cfg, p["ffn"], h)
+    else:
+        ffn_out, aux = apply_mlp(cfg, p["ffn"], h), jnp.zeros((), jnp.float32)
+    x = x + ffn_out
+    x = logical_constraint(x, "batch", "act_seq", None)
+    return x, new_cache, aux
+
+
+def apply_decoder_stack(cfg, p, x, *, angles, cache=None, cache_pos=None, causal=True):
+    """x (B,S,D); cache: stacked per-layer pytree with leading L axis or None.
+
+    Layers scan in groups of `full_attn_every` (1 for plain archs): the iRoPE
+    chunked/full mix is a STATIC pattern inside the group body, so the HLO has
+    no conditionals. Returns (x, new_cache, aux_loss_sum).
+    """
+    unit = cfg.full_attn_every if (cfg.full_attn_every > 0 and cfg.attention_chunk > 0) else 1
+    n_groups = cfg.n_layers // unit
+
+    def group_view(tree):
+        return jax.tree_util.tree_map(
+            lambda a: a.reshape((n_groups, unit) + a.shape[1:]), tree
+        )
+
+    gp = group_view(p)
+    gcache = group_view(cache) if cache is not None else None
+
+    def body(carry, scanned):
+        (x,) = carry
+        group_p, group_cache = scanned
+        new_caches = []
+        aux_total = jnp.zeros((), jnp.float32)
+        for i in range(unit):
+            layer_p = jax.tree_util.tree_map(lambda a: a[i], group_p)
+            layer_cache = (
+                jax.tree_util.tree_map(lambda a: a[i], group_cache)
+                if cache is not None else None
+            )
+            x, new_c, aux = _decoder_layer(
+                cfg, layer_p, x, angles=angles, is_full=cfg.uses_full_attn(i),
+                cache=layer_cache, cache_pos=cache_pos, causal=causal,
+            )
+            aux_total = aux_total + aux
+            new_caches.append(new_c if new_c is not None else 0)
+        stacked_new = (
+            jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *new_caches)
+            if cache is not None else 0
+        )
+        return (x,), (stacked_new, aux_total)
+
+    body = _remat_wrap(cfg, body)
+
+    dummy_cache = gcache if cache is not None else jnp.zeros((n_groups,))
+    (x,), (new_cache, aux) = jax.lax.scan(
+        body, (x,), (gp, dummy_cache), unroll=n_groups if cfg.scan_unroll else 1
+    )
+    if cache is not None:
+        new_cache = jax.tree_util.tree_map(
+            lambda a: a.reshape((cfg.n_layers,) + a.shape[2:]), new_cache
+        )
+    else:
+        new_cache = None
+    return x, new_cache, jnp.sum(aux)
+
+
+# ---------------------------------------------------------------------------
+# Jamba hybrid blocks: period-8 (attn at attn_offset, rest SSM; MoE cadence)
+# ---------------------------------------------------------------------------
+
+
+def _jamba_block_structure(cfg):
+    """Sublayer kinds within one period: [("attn"|"ssm", is_moe), ...]."""
+    period = cfg.attn_every
+    out = []
+    for i in range(period):
+        kind = "attn" if i % period == cfg.attn_offset else "ssm"
+        is_moe = cfg.n_experts > 0 and (i % cfg.moe_every == cfg.moe_offset)
+        out.append((kind, is_moe))
+    return out
+
+
+def init_jamba_stack(key, cfg, dtype):
+    structure = _jamba_block_structure(cfg)
+    n_blocks = cfg.n_layers // len(structure)
+
+    def init_block(k):
+        ks = jax.random.split(k, len(structure) * 4)
+        block = []
+        for i, (kind, is_moe) in enumerate(structure):
+            k0, k1, k2, k3 = ks[4 * i : 4 * i + 4]
+            sub = {"ln1": init_norm(cfg, dtype), "ln2": init_norm(cfg, dtype)}
+            if kind == "attn":
+                sub["mix"] = attn_lib.init_attention(k0, cfg, dtype)
+            else:
+                sub["mix"] = ssm_lib.init_ssm(k1, cfg, dtype)
+            sub["ffn"] = (
+                moe_lib.init_moe(k2, cfg, dtype) if is_moe else init_mlp(k3, cfg, dtype)
+            )
+            block.append(sub)
+        return tuple(block)
+
+    return _stack_init(init_block, key, n_blocks)
+
+
+def jamba_stack_axes(cfg):
+    structure = _jamba_block_structure(cfg)
+    block = []
+    for kind, is_moe in structure:
+        sub = {"ln1": norm_axes(cfg), "ln2": norm_axes(cfg)}
+        sub["mix"] = attn_lib.attention_axes(cfg) if kind == "attn" else ssm_lib.ssm_axes(cfg)
+        sub["ffn"] = moe_lib.moe_axes(cfg) if is_moe else mlp_axes(cfg)
+        block.append(sub)
+    return _stack_axes(tuple(block))
+
+
+def init_jamba_cache(cfg, batch, max_len, dtype):
+    structure = _jamba_block_structure(cfg)
+    n_blocks = cfg.n_layers // len(structure)
+
+    def one_block():
+        return tuple(
+            attn_lib.init_cache(cfg, batch, max_len, dtype)
+            if kind == "attn"
+            else ssm_lib.init_ssm_cache(cfg, batch, dtype)
+            for kind, _ in structure
+        )
+
+    block = one_block()
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (n_blocks,) + x.shape), block
+    )
+
+
+def jamba_cache_axes(cfg):
+    structure = _jamba_block_structure(cfg)
+    block = tuple(
+        attn_lib.cache_axes() if kind == "attn" else ssm_lib.ssm_cache_axes()
+        for kind, _ in structure
+    )
+    return _stack_axes(block)
+
+
+def apply_jamba_stack(cfg, p, x, *, angles, cache=None, cache_pos=None):
+    structure = _jamba_block_structure(cfg)
+
+    def block_body(carry, scanned):
+        (x,) = carry
+        block_p, block_cache = scanned
+        new_caches = []
+        aux_total = jnp.zeros((), jnp.float32)
+        for i, (kind, is_moe) in enumerate(structure):
+            sub = block_p[i]
+            sub_cache = block_cache[i] if cache is not None else None
+            h = apply_norm(cfg, sub["ln1"], x)
+            if kind == "attn":
+                mix_out, new_c = attn_lib.attend(
+                    cfg, sub["mix"], h, angles=angles, causal=True,
+                    cache=sub_cache, cache_pos=cache_pos,
+                )
+            else:
+                mix_out, new_c = ssm_lib.apply_ssm(cfg, sub["mix"], h, sub_cache, cache_pos)
+            x = x + mix_out
+            h = apply_norm(cfg, sub["ln2"], x)
+            if is_moe:
+                ffn_out, aux = moe_lib.apply_moe(cfg, sub["ffn"], h)
+                aux_total = aux_total + aux
+            else:
+                ffn_out = apply_mlp(cfg, sub["ffn"], h)
+            x = x + ffn_out
+            new_caches.append(new_c if new_c is not None else 0)
+        x = logical_constraint(x, "batch", "act_seq", None)
+        return (x,), (tuple(new_caches) if cache is not None else 0, aux_total)
+
+    block_body = _remat_wrap(cfg, block_body)
+
+    n_blocks = cfg.n_layers // cfg.attn_every
+    dummy = cache if cache is not None else jnp.zeros((n_blocks,))
+    (x,), (new_cache, aux) = jax.lax.scan(
+        block_body, (x,), (p, dummy), unroll=n_blocks if cfg.scan_unroll else 1
+    )
+    if cache is None:
+        new_cache = None
+    return x, new_cache, jnp.sum(aux)
+
+
+# ---------------------------------------------------------------------------
+# Whisper-style encoder/decoder stacks
+# ---------------------------------------------------------------------------
+
+
+def init_encoder_stack(key, cfg, dtype):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    L = cfg.n_enc_layers
+    return {
+        "attn": _stack_init(lambda k: attn_lib.init_attention(k, cfg, dtype), k1, L),
+        "ln1": _stack_init(lambda k: init_norm(cfg, dtype), k2, L),
+        "ln2": _stack_init(lambda k: init_norm(cfg, dtype), k3, L),
+        "ffn": _stack_init(lambda k: init_mlp(k, cfg, dtype), k4, L),
+    }
+
+
+def encoder_stack_axes(cfg):
+    return {
+        "attn": _stack_axes(attn_lib.attention_axes(cfg)),
+        "ln1": _stack_axes(norm_axes(cfg)),
+        "ln2": _stack_axes(norm_axes(cfg)),
+        "ffn": _stack_axes(mlp_axes(cfg)),
+    }
+
+
+def apply_encoder_stack(cfg, p, x):
+    def body(carry, layer_p):
+        (x,) = carry
+        h = apply_norm(cfg, layer_p["ln1"], x)
+        out, _ = attn_lib.attend(cfg, layer_p["attn"], h, angles=None, causal=False)
+        x = x + out
+        h = apply_norm(cfg, layer_p["ln2"], x)
+        x = x + apply_mlp(cfg, layer_p["ffn"], h)
+        return (x,), None
+
+    body = _remat_wrap(cfg, body)
+    (x,), _ = jax.lax.scan(body, (x,), p, unroll=cfg.n_enc_layers if cfg.scan_unroll else 1)
+    return x
+
+
+def init_crossdecoder_stack(key, cfg, dtype):
+    ks = jax.random.split(key, 6)
+    L = cfg.n_layers
+    return {
+        "self_attn": _stack_init(lambda k: attn_lib.init_attention(k, cfg, dtype), ks[0], L),
+        "cross_attn": _stack_init(
+            lambda k: attn_lib.init_attention(k, cfg, dtype, cross=True), ks[1], L
+        ),
+        "ln1": _stack_init(lambda k: init_norm(cfg, dtype), ks[2], L),
+        "ln2": _stack_init(lambda k: init_norm(cfg, dtype), ks[3], L),
+        "ln3": _stack_init(lambda k: init_norm(cfg, dtype), ks[4], L),
+        "ffn": _stack_init(lambda k: init_mlp(k, cfg, dtype), ks[5], L),
+    }
+
+
+def crossdecoder_stack_axes(cfg):
+    return {
+        "self_attn": _stack_axes(attn_lib.attention_axes(cfg)),
+        "cross_attn": _stack_axes(attn_lib.attention_axes(cfg, cross=True)),
+        "ln1": _stack_axes(norm_axes(cfg)),
+        "ln2": _stack_axes(norm_axes(cfg)),
+        "ln3": _stack_axes(norm_axes(cfg)),
+        "ffn": _stack_axes(mlp_axes(cfg)),
+    }
+
+
+def apply_crossdecoder_stack(cfg, p, x, enc_kv, *, cache=None, cache_pos=None):
+    """enc_kv: stacked per-layer (k, v) from the encoder output projections."""
+
+    def body(carry, scanned):
+        (x,) = carry
+        layer_p, layer_enc_kv, layer_cache = scanned
+        if cache is None:
+            layer_cache = None
+        h = apply_norm(cfg, layer_p["ln1"], x)
+        out, new_cache = attn_lib.attend(
+            cfg, layer_p["self_attn"], h, angles=None, causal=True,
+            cache=layer_cache, cache_pos=cache_pos,
+        )
+        if cache is None:
+            new_cache = 0
+        x = x + out
+        h = apply_norm(cfg, layer_p["ln2"], x)
+        out, _ = attn_lib.attend(
+            cfg, layer_p["cross_attn"], h, kv_override=layer_enc_kv, causal=False
+        )
+        x = x + out
+        h = apply_norm(cfg, layer_p["ln3"], x)
+        x = x + apply_mlp(cfg, layer_p["ffn"], h)
+        return (x,), new_cache
+
+    body = _remat_wrap(cfg, body)
+    dummy = cache if cache is not None else jnp.zeros((cfg.n_layers, 0))
+    (x,), new_cache = jax.lax.scan(
+        body, (x,), (p, enc_kv, dummy), unroll=cfg.n_layers if cfg.scan_unroll else 1
+    )
+    if cache is None:
+        new_cache = None
+    return x, new_cache
+
+
+def compute_enc_kv(cfg, p, enc_out):
+    """Precompute per-layer cross-attention K/V from encoder output (prefill)."""
+    hd = cfg.resolved_head_dim
+
+    def one_layer(layer_p):
+        k = attn_lib._proj(enc_out, layer_p["wk"], layer_p.get("bk"), cfg.n_kv_heads, hd)
+        v = attn_lib._proj(enc_out, layer_p["wv"], layer_p.get("bv"), cfg.n_kv_heads, hd)
+        return k, v
+
+    return jax.vmap(one_layer)(p["cross_attn"])

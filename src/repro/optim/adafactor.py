@@ -1,0 +1,88 @@
+"""Adafactor (Shazeer & Stern 2018) with optional first-order momentum.
+
+Second moment is rank-1 factored over the last two dims of >=2-D leaves
+(row/col running means); 1-D leaves keep a full second moment. The paper's
+GaLore+Adafactor setting ("Adafactor with first-order statistics") maps to
+beta1 > 0 here.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.transform import GradientTransformation
+
+
+def _rms(x):
+    return jnp.sqrt(jnp.mean(jnp.square(x)) + 1e-30)
+
+
+def scale_by_adafactor(
+    beta1: float | None = 0.9,
+    decay_power: float = 0.8,
+    clip_threshold: float = 1.0,
+    eps: float = 1e-30,
+) -> GradientTransformation:
+    def factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def per_leaf(p):
+            if factored(p):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),  # row stats (reduce last dim)
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        state = {
+            "v": jax.tree_util.tree_map(per_leaf, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+        if beta1 is not None:
+            state["m"] = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+        return state
+
+    def update(grads, state, params=None):
+        count = state["count"] + 1
+        beta2 = 1.0 - count.astype(jnp.float32) ** (-decay_power)
+
+        def per_leaf(g, v):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + eps
+            if factored(g):
+                vr = beta2 * v["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc = beta2 * v["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+                denom_r = vr / jnp.mean(vr, axis=-1, keepdims=True)
+                precond = g32 / (jnp.sqrt(denom_r)[..., None] * jnp.sqrt(vc)[..., None, :])
+                return precond, {"vr": vr, "vc": vc}
+            vf = beta2 * v["v"] + (1 - beta2) * g2
+            return g32 / jnp.sqrt(vf), {"v": vf}
+
+        flat_updates = jax.tree_util.tree_map(
+            per_leaf, grads, state["v"], is_leaf=lambda x: hasattr(x, "shape")
+        )
+        updates = jax.tree_util.tree_map(
+            lambda pair: pair[0], flat_updates, is_leaf=lambda x: isinstance(x, tuple)
+        )
+        new_v = jax.tree_util.tree_map(
+            lambda pair: pair[1], flat_updates, is_leaf=lambda x: isinstance(x, tuple)
+        )
+
+        # update-RMS clipping (Adafactor's d=1 clipping)
+        updates = jax.tree_util.tree_map(
+            lambda u: u / jnp.maximum(1.0, _rms(u) / clip_threshold), updates
+        )
+        new_state = {"v": new_v, "count": count}
+        if beta1 is not None:
+            m = jax.tree_util.tree_map(
+                lambda m_, u: beta1 * m_ + (1 - beta1) * u, state["m"], updates
+            )
+            updates = m
+            new_state["m"] = m
+        updates = jax.tree_util.tree_map(lambda u, g: u.astype(g.dtype), updates, grads)
+        return updates, new_state
+
+    return GradientTransformation(init, update)

@@ -1,0 +1,35 @@
+"""Adam / AdamW (Kingma & Ba 2015; Loshchilov & Hutter 2019), fp32 state."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.transform import GradientTransformation
+
+
+def scale_by_adam(b1=0.9, b2=0.999, eps=1e-8) -> GradientTransformation:
+    def init(params):
+        zeros = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return {"m": zeros, "v": jax.tree_util.tree_map(jnp.copy, zeros), "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        count = state["count"] + 1
+        m = jax.tree_util.tree_map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32), state["m"], grads
+        )
+        v = jax.tree_util.tree_map(
+            lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"],
+            grads,
+        )
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+        out = jax.tree_util.tree_map(
+            lambda m_, v_, g: ((m_ / c1) / (jnp.sqrt(v_ / c2) + eps)).astype(g.dtype),
+            m,
+            v,
+            grads,
+        )
+        return out, {"m": m, "v": v, "count": count}
+
+    return GradientTransformation(init, update)

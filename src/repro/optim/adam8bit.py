@@ -1,0 +1,75 @@
+"""8-bit Adam (Dettmers et al., 2022): blockwise-quantized moment states.
+
+Moments are stored as uint8 codes + per-block absmax (≈1 byte + 1/64 float
+per element vs 4 bytes for fp32 Adam). The update dequantizes, performs the
+fp32 Adam math, and requantizes — exactly the sequence the fused Pallas
+kernel (kernels/adam8bit_kernel.py) performs in one VMEM pass on TPU.
+
+Small leaves (< min_quant_size elems) stay fp32, as in bitsandbytes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import quant8
+from repro.optim.transform import GradientTransformation
+
+MIN_QUANT_SIZE = 4096
+
+
+def scale_by_adam8bit(b1=0.9, b2=0.999, eps=1e-8, min_quant_size=MIN_QUANT_SIZE) -> GradientTransformation:
+    def is_quantized(p):
+        return p.size >= min_quant_size
+
+    def init(params):
+        def per_leaf(p):
+            if is_quantized(p):
+                zeros = jnp.zeros(p.shape, jnp.float32)
+                return {
+                    "m": quant8.quant_state(zeros, signed=True),
+                    "v": quant8.quant_state(zeros, signed=False),
+                }
+            return {
+                "m": jnp.zeros(p.shape, jnp.float32),
+                "v": jnp.zeros(p.shape, jnp.float32),
+            }
+
+        return {
+            "mv": jax.tree_util.tree_map(per_leaf, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params=None):
+        count = state["count"] + 1
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+
+        def per_leaf(g, mv):
+            g32 = g.astype(jnp.float32)
+            if is_quantized(g):
+                m = quant8.dequant_state(mv["m"], g.shape, signed=True)
+                v = quant8.dequant_state(mv["v"], g.shape, signed=False)
+            else:
+                m, v = mv["m"], mv["v"]
+            m = b1 * m + (1 - b1) * g32
+            v = b2 * v + (1 - b2) * jnp.square(g32)
+            upd = ((m / c1) / (jnp.sqrt(v / c2) + eps)).astype(g.dtype)
+            if is_quantized(g):
+                new_mv = {
+                    "m": quant8.quant_state(m, signed=True),
+                    "v": quant8.quant_state(v, signed=False),
+                }
+            else:
+                new_mv = {"m": m, "v": v}
+            return upd, new_mv
+
+        paired = jax.tree_util.tree_map(
+            per_leaf, grads, state["mv"], is_leaf=lambda x: hasattr(x, "shape")
+        )
+        is_pair = lambda x: isinstance(x, tuple)
+        updates = jax.tree_util.tree_map(lambda t: t[0], paired, is_leaf=is_pair)
+        new_mv = jax.tree_util.tree_map(lambda t: t[1], paired, is_leaf=is_pair)
+        return updates, {"mv": new_mv, "count": count}
+
+    return GradientTransformation(init, update)

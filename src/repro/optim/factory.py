@@ -1,0 +1,57 @@
+"""Build the full optimizer pipeline from a TrainConfig.
+
+Pipeline (paper-faithful ordering):
+    clip_by_global_norm -> [galore(inner)] -> add_decayed_weights -> -lr schedule
+GaLore wraps only the statistics transform (Adam/Adafactor/8-bit Adam); weight
+decay and LR scaling act on full-shape updates, as in the reference impl.
+"""
+from __future__ import annotations
+
+from repro.configs.base import TrainConfig
+from repro.core.galore import galore
+from repro.optim import schedules
+from repro.optim.adafactor import scale_by_adafactor
+from repro.optim.adam import scale_by_adam
+from repro.optim.adam8bit import scale_by_adam8bit
+from repro.optim.transform import (
+    GradientTransformation,
+    add_decayed_weights,
+    chain,
+    clip_by_global_norm,
+    scale_by_schedule,
+    trace,
+)
+
+
+def _stats_transform(tc: TrainConfig) -> GradientTransformation:
+    if tc.optimizer in ("adam", "adamw"):
+        return scale_by_adam(tc.b1, tc.b2, tc.eps)
+    if tc.optimizer == "adam8bit":
+        return scale_by_adam8bit(tc.b1, tc.b2, tc.eps)
+    if tc.optimizer == "adafactor":
+        return scale_by_adafactor(beta1=tc.b1)
+    if tc.optimizer == "sgd":
+        return trace(momentum=tc.b1)
+    raise ValueError(f"unknown optimizer {tc.optimizer!r}")
+
+
+def galore_state_index(tc: TrainConfig) -> int:
+    """Position of the galore/stats state inside the chain state tuple."""
+    return 1 if tc.grad_clip > 0 else 0
+
+
+def build_optimizer(tc: TrainConfig, param_axes=None) -> GradientTransformation:
+    stats = _stats_transform(tc)
+    if tc.galore is not None:
+        stats = galore(stats, tc.galore, param_axes=param_axes,
+                       external_refresh=tc.galore_external_refresh,
+                       pre_projected=tc.galore_dp_compress)
+    parts = []
+    if tc.grad_clip > 0:
+        parts.append(clip_by_global_norm(tc.grad_clip))
+    parts.append(stats)
+    if tc.weight_decay > 0 and tc.optimizer == "adamw":
+        parts.append(add_decayed_weights(tc.weight_decay))
+    sched = schedules.warmup_cosine(tc.lr, tc.warmup_steps, tc.total_steps)
+    parts.append(scale_by_schedule(lambda c: -sched(c)))
+    return chain(*parts)

@@ -1,0 +1,98 @@
+"""Paper-baseline low-rank weight methods: LoRA, ReLoRA, naive factorization.
+
+LoRA:    W_eff = W0 + (alpha/r) B A, train (A, B), freeze W0.
+ReLoRA:  LoRA + periodic merge of BA into W0 with adaptor & optimizer reset.
+LowRank: W = B A trained from scratch (Kamalakara et al., 2022) — W0 = 0.
+
+Implemented as a parameter-space wrapper: `split()` chooses the adapted 2-D
+leaves, `merge()` materializes effective weights for the unchanged forward
+pass. Gradients flow only into the adaptors (trainable tree).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import tree_map_with_path
+
+DEFAULT_EXCLUDE = ("embed", "dec_pos", "norm", "ln", "bias", "router", "A_log", "dt_bias", "D")
+
+
+@dataclasses.dataclass(frozen=True)
+class LoraConfig:
+    rank: int = 8
+    alpha: float = 32.0
+    mode: str = "lora"  # lora | relora | lowrank
+    merge_freq: int = 0  # relora merge period
+
+
+def _adapted(path: str, leaf, rank: int) -> bool:
+    if not hasattr(leaf, "ndim") or leaf.ndim < 2:
+        return False
+    if any(e in path for e in DEFAULT_EXCLUDE):
+        return False
+    return min(leaf.shape[-2], leaf.shape[-1]) > rank
+
+
+def init_adaptors(params, cfg: LoraConfig, key):
+    """Returns adaptor tree mirroring params: {"A","B"} dicts or scalar 0."""
+    leaves = jax.tree_util.tree_leaves(params)
+    keys = iter(jax.random.split(key, len(leaves) + 1))
+
+    def per_leaf(path, p):
+        if not _adapted(path, p, cfg.rank):
+            return jnp.zeros((), jnp.float32)
+        m, n = p.shape[-2], p.shape[-1]
+        lead = p.shape[:-2]
+        kA = next(keys)
+        A = jax.random.normal(kA, lead + (cfg.rank, n), jnp.float32) * (cfg.rank ** -0.5)
+        B = jnp.zeros(lead + (m, cfg.rank), jnp.float32)
+        return {"A": A, "B": B}
+
+    return tree_map_with_path(per_leaf, params)
+
+
+def merge(params, adaptors, cfg: LoraConfig):
+    """Effective weights: W0 (stop-grad for lora/relora; zero for lowrank) + sBA."""
+    s = cfg.alpha / cfg.rank
+
+    def per_leaf(p, a):
+        if not isinstance(a, dict):
+            return p
+        delta = s * jnp.einsum("...mr,...rn->...mn", a["B"], a["A"])
+        if cfg.mode == "lowrank":
+            return delta.astype(p.dtype)
+        return (jax.lax.stop_gradient(p) + delta).astype(p.dtype)
+
+    return jax.tree_util.tree_map(per_leaf, params, adaptors, is_leaf=_leaf_or_adaptor)
+
+
+def _leaf_or_adaptor(x):
+    return isinstance(x, dict) and set(x.keys()) == {"A", "B"} or hasattr(x, "shape")
+
+
+def relora_merge(params, adaptors, cfg: LoraConfig, key):
+    """Fold BA into W0, re-init adaptors (ReLoRA reset)."""
+    s = cfg.alpha / cfg.rank
+
+    def fold(p, a):
+        if not isinstance(a, dict):
+            return p
+        return (p + s * jnp.einsum("...mr,...rn->...mn", a["B"], a["A"])).astype(p.dtype)
+
+    new_params = jax.tree_util.tree_map(fold, params, adaptors, is_leaf=_leaf_or_adaptor)
+    new_adaptors = init_adaptors(new_params, cfg, key)
+    return new_params, new_adaptors
+
+
+def adaptor_param_count(adaptors) -> int:
+    import numpy as np
+
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(adaptors):
+        if hasattr(leaf, "shape") and leaf.ndim >= 2:
+            total += int(np.prod(leaf.shape))
+    return total

@@ -1,0 +1,20 @@
+"""LR schedules (paper setup: 10% linear warmup, cosine decay to 10%)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(lr: float, warmup_steps: int, total_steps: int, final_frac: float = 0.1):
+    def schedule(count):
+        count = count.astype(jnp.float32)
+        warm = count / jnp.maximum(1.0, float(warmup_steps))
+        progress = (count - warmup_steps) / jnp.maximum(1.0, float(total_steps - warmup_steps))
+        progress = jnp.clip(progress, 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * progress))
+        return lr * jnp.where(count < warmup_steps, warm, cos)
+
+    return schedule
+
+
+def constant(lr: float):
+    return lambda count: jnp.full((), lr, jnp.float32)

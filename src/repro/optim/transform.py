@@ -1,0 +1,114 @@
+"""Minimal optax-style gradient-transformation core (no optax in container).
+
+A GradientTransformation is (init, update):
+    state            = init(params)
+    updates, state   = update(grads, state, params)
+`apply_updates(params, updates)` adds them. All composition is via `chain`.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class GradientTransformation(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple[Any, Any]]
+
+
+def chain(*transforms: GradientTransformation) -> GradientTransformation:
+    def init(params):
+        return tuple(t.init(params) for t in transforms)
+
+    def update(grads, state, params=None):
+        new_state = []
+        for t, s in zip(transforms, state):
+            grads, s = t.update(grads, s, params)
+            new_state.append(s)
+        return grads, tuple(new_state)
+
+    return GradientTransformation(init, update)
+
+
+def identity() -> GradientTransformation:
+    return GradientTransformation(lambda p: (), lambda g, s, p=None: (g, s))
+
+
+def scale(factor: float) -> GradientTransformation:
+    return GradientTransformation(
+        lambda p: (),
+        lambda g, s, p=None: (jax.tree_util.tree_map(lambda x: x * factor, g), s),
+    )
+
+
+def scale_by_schedule(schedule: Callable[[jnp.ndarray], jnp.ndarray]) -> GradientTransformation:
+    def init(params):
+        return {"count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        count = state["count"] + 1
+        s = schedule(count)
+        return jax.tree_util.tree_map(lambda x: x * s, grads), {"count": count}
+
+    return GradientTransformation(init, update)
+
+
+def clip_by_global_norm(max_norm: float) -> GradientTransformation:
+    def update(grads, state, params=None):
+        leaves = jax.tree_util.tree_leaves(grads)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+        factor = jnp.minimum(1.0, max_norm / (gnorm + 1e-9))
+        return jax.tree_util.tree_map(lambda x: (x * factor).astype(x.dtype), grads), state
+
+    return GradientTransformation(lambda p: (), update)
+
+
+def add_decayed_weights(weight_decay: float, mask=None) -> GradientTransformation:
+    """AdamW-style decoupled weight decay: update += wd * param."""
+
+    def update(grads, state, params=None):
+        assert params is not None, "add_decayed_weights needs params"
+        if weight_decay == 0.0:
+            return grads, state
+
+        def add(path_g, g, p):
+            if mask is not None and not mask(path_g):
+                return g
+            return g + weight_decay * p.astype(g.dtype)
+
+        from repro.utils import tree_map_with_path
+
+        return tree_map_with_path(add, grads, params), state
+
+    return GradientTransformation(lambda p: (), update)
+
+
+def trace(momentum: float, nesterov: bool = False) -> GradientTransformation:
+    def init(params):
+        return jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+    def update(grads, state, params=None):
+        new_state = jax.tree_util.tree_map(
+            lambda m, g: momentum * m + g.astype(jnp.float32), state, grads
+        )
+        if nesterov:
+            out = jax.tree_util.tree_map(
+                lambda m, g: (momentum * m + g.astype(jnp.float32)).astype(g.dtype),
+                new_state,
+                grads,
+            )
+        else:
+            out = jax.tree_util.tree_map(lambda m, g: m.astype(g.dtype), new_state, grads)
+        return out, new_state
+
+    return GradientTransformation(init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(lambda p, u: (p + u.astype(p.dtype)).astype(p.dtype), params, updates)
+
+
+def tree_zeros_like_f32(tree):
+    return jax.tree_util.tree_map(lambda x: jnp.zeros(x.shape, jnp.float32), tree)

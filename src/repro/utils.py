@@ -1,0 +1,175 @@
+"""Shared utilities: dtype handling, pytree helpers, logical-axis sharding context.
+
+The model code annotates activations/params with *logical* axis names
+("batch", "heads", "ff", ...). A ShardingRules context maps logical names to
+mesh axes; outside any context (CPU unit tests) every annotation is a no-op,
+so the same model code runs on 1 device and on the 512-chip dry-run mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Pytree = Any
+
+_DTYPES = {
+    "float32": jnp.float32,
+    "bfloat16": jnp.bfloat16,
+    "float16": jnp.float16,
+    "int8": jnp.int8,
+    "uint8": jnp.uint8,
+    "int32": jnp.int32,
+}
+
+
+def canonical_dtype(dtype) -> jnp.dtype:
+    if isinstance(dtype, str):
+        return _DTYPES[dtype]
+    return dtype
+
+
+# ---------------------------------------------------------------------------
+# Logical sharding context
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Maps logical axis names -> mesh axis name(s) (or None = replicated).
+
+    A logical dim maps to a mesh axis only if the dim size is divisible by the
+    mesh axis size; otherwise it silently falls back to replication (e.g. a
+    single KV head cannot be sharded 16-way).
+    """
+
+    mesh: Mesh
+    rules: Mapping[str, Any]  # logical name -> mesh axis | tuple | None
+
+    def mesh_axis_size(self, axis) -> int:
+        if axis is None:
+            return 1
+        if isinstance(axis, (tuple, list)):
+            size = 1
+            for a in axis:
+                size *= self.mesh.shape[a]
+            return size
+        return self.mesh.shape[axis]
+
+    def spec_for(self, logical: Sequence[str | None], shape: Sequence[int] | None = None) -> P:
+        out = []
+        used: set[str] = set()
+        for i, name in enumerate(logical):
+            axis = self.rules.get(name) if name is not None else None
+            if axis is not None:
+                flat = tuple(axis) if isinstance(axis, (tuple, list)) else (axis,)
+                if any(a in used for a in flat):
+                    axis = None  # a mesh axis may appear only once in a spec
+                elif shape is not None and shape[i] % self.mesh_axis_size(axis) != 0:
+                    axis = None  # not divisible -> replicate
+                else:
+                    used.update(flat)
+            out.append(axis)
+        return P(*out)
+
+    def sharding_for(self, logical: Sequence[str | None], shape=None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec_for(logical, shape))
+
+
+_CTX = threading.local()
+
+
+@contextlib.contextmanager
+def sharding_context(rules: ShardingRules | None):
+    prev = getattr(_CTX, "rules", None)
+    _CTX.rules = rules
+    try:
+        yield
+    finally:
+        _CTX.rules = prev
+
+
+def active_rules() -> ShardingRules | None:
+    return getattr(_CTX, "rules", None)
+
+
+def logical_constraint(x: jax.Array, *logical: str | None) -> jax.Array:
+    """with_sharding_constraint by logical names; no-op outside a context."""
+    rules = active_rules()
+    if rules is None:
+        return x
+    spec = rules.spec_for(logical, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Pytree helpers
+# ---------------------------------------------------------------------------
+
+
+def is_axes(x) -> bool:
+    """True for a logical-axes tuple leaf: ('embed', 'ff'), (None,), ()...
+
+    Structural tuples (e.g. Jamba's tuple-of-sublayer-dicts) are NOT leaves."""
+    return isinstance(x, tuple) and all(e is None or isinstance(e, str) for e in x)
+
+
+def tree_bytes(tree: Pytree) -> int:
+    """Total bytes across all array leaves (works on ShapeDtypeStruct too)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    total = 0
+    for leaf in leaves:
+        if hasattr(leaf, "shape") and hasattr(leaf, "dtype"):
+            total += int(np.prod(leaf.shape, dtype=np.int64)) * jnp.dtype(leaf.dtype).itemsize
+    return int(total)
+
+
+def tree_params(tree: Pytree) -> int:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return int(sum(int(np.prod(l.shape, dtype=np.int64)) for l in leaves if hasattr(l, "shape")))
+
+
+def tree_paths(tree: Pytree) -> list[tuple[str, Any]]:
+    """[(dotted.path, leaf)] for a nested dict/list pytree."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        out.append((path_str(path), leaf))
+    return out
+
+
+def path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return ".".join(parts)
+
+
+def tree_map_with_path(fn, tree: Pytree, *rest: Pytree) -> Pytree:
+    """fn(path_str, leaf, *rest_leaves) over the tree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf, *r: fn(path_str(path), leaf, *r), tree, *rest
+    )
+
+
+def assert_finite(tree: Pytree, where: str = "") -> None:
+    for path, leaf in tree_paths(tree):
+        if hasattr(leaf, "dtype") and jnp.issubdtype(leaf.dtype, jnp.floating):
+            if not bool(jnp.all(jnp.isfinite(leaf))):
+                raise FloatingPointError(f"non-finite values at {where}:{path}")
+
+
+def global_norm(tree: Pytree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(l.astype(jnp.float32))) for l in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(sum(leaves))

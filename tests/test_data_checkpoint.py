@@ -1,0 +1,102 @@
+"""Data pipeline + checkpoint manager: determinism, atomicity, elastic restore."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.pipeline import DataConfig, SyntheticC4
+
+
+def test_pipeline_batch_shapes_and_targets():
+    d = SyntheticC4(DataConfig(vocab_size=128, seq_len=16, batch_per_host=4))
+    b = d.batch(0)
+    assert b["tokens"].shape == (4, 16)
+    assert b["targets"].shape == (4, 16)
+    np.testing.assert_array_equal(np.asarray(b["targets"][:, :-1]), np.asarray(b["tokens"][:, 1:]))
+    assert float(b["loss_mask"][0, -1]) == 0.0
+    assert int(jnp.max(b["tokens"])) < 128
+
+
+def test_pipeline_has_learnable_structure():
+    """Structured continuation must dominate: next token is predictable."""
+    d = SyntheticC4(DataConfig(vocab_size=512, seq_len=64, batch_per_host=8))
+    b = d.batch(3)
+    toks = np.asarray(b["tokens"])
+    mult = int(d._mults[3 % 16])
+    pred = (toks[:, :-1] * mult + 7) % 512
+    frac = np.mean(pred == toks[:, 1:])
+    assert frac > 0.5, frac
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    ckpt = CheckpointManager(str(tmp_path), async_save=False)
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "nested": {"b": jnp.ones((4,), jnp.bfloat16)}}
+    ckpt.save(7, tree, extra_meta={"note": "x"}, block=True)
+    assert ckpt.latest_step() == 7
+    assert ckpt.meta(7)["note"] == "x"
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, tree)
+    restored = ckpt.restore(7, zeros)
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.asarray(tree["a"]))
+    assert restored["nested"]["b"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_gc_keeps_latest(tmp_path):
+    ckpt = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    for s in [1, 2, 3, 4]:
+        ckpt.save(s, {"x": jnp.asarray([s])}, block=True)
+    assert ckpt.all_steps() == [3, 4]
+
+
+def test_checkpoint_ignores_uncommitted_tmp(tmp_path):
+    ckpt = CheckpointManager(str(tmp_path), async_save=False)
+    ckpt.save(1, {"x": jnp.ones(2)}, block=True)
+    # a crashed save: directory without META.json commit marker
+    os.makedirs(tmp_path / "step_00000009")
+    assert ckpt.latest_step() == 1
+
+
+def test_checkpoint_async_save(tmp_path):
+    ckpt = CheckpointManager(str(tmp_path), async_save=True)
+    ckpt.save(5, {"x": jnp.full((8,), 5.0)})
+    ckpt.wait()
+    out = ckpt.restore(5, {"x": jnp.zeros((8,))})
+    np.testing.assert_array_equal(np.asarray(out["x"]), np.full((8,), 5.0))
+
+
+def test_elastic_restore_onto_new_sharding(tmp_path):
+    """Restore accepts different target shardings (mesh reshape path)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    ckpt = CheckpointManager(str(tmp_path), async_save=False)
+    tree = {"w": jnp.arange(16.0).reshape(4, 4)}
+    ckpt.save(1, tree, block=True)
+    mesh = jax.make_mesh((1,), ("data",))
+    sh = {"w": NamedSharding(mesh, P(None, None))}
+    restored = ckpt.restore(1, jax.tree_util.tree_map(jnp.zeros_like, tree), shardings=sh)
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(tree["w"]))
+    assert restored["w"].sharding == sh["w"]
+
+
+def test_train_resume_bitwise_consistent(tmp_path):
+    """20 straight steps == 10 steps + checkpoint + resume + 10 steps."""
+    from repro.configs.base import GaLoreConfig, TrainConfig
+    from repro.launch.train import RunConfig, train_loop
+
+    tc = TrainConfig(optimizer="adamw", lr=1e-3, total_steps=20, warmup_steps=2,
+                     galore=GaLoreConfig(rank=8, update_freq=10))
+    mk = lambda sub, steps, every: RunConfig(
+        arch="llama_60m", smoke=True, steps=steps, batch_per_host=2, seq_len=32,
+        ckpt_dir=str(tmp_path / sub), ckpt_every=every, log_every=100,
+    )
+    p_straight, *_ = train_loop(mk("a", 20, 0), tc)
+    train_loop(mk("b", 11, 10), tc)  # checkpoints at step 10
+    p_resumed, *_ = train_loop(mk("b", 20, 0), tc)  # resumes from 10
+    a = jax.tree_util.tree_leaves(p_straight)
+    b = jax.tree_util.tree_leaves(p_resumed)
+    for x, y in zip(a, b):
+        np.testing.assert_allclose(np.asarray(x, np.float32), np.asarray(y, np.float32),
+                                   rtol=2e-4, atol=2e-5)

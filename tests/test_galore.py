@@ -1,0 +1,177 @@
+"""GaLore core math: paper properties, plans, accounting, refresh modes."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import GaLoreConfig, ModelConfig, TrainConfig
+from repro.core.galore import (
+    LeafPlan,
+    galore,
+    galore_state_bytes,
+    plan_for_params,
+    refresh_projectors,
+)
+from repro.core.projector import compute_projector, subspace_overlap
+from repro.optim.adam import scale_by_adam
+from repro.optim.transform import GradientTransformation, apply_updates
+
+identity_inner = GradientTransformation(lambda p: (), lambda g, s, p=None: (g, s))
+
+
+def test_fullrank_identity_trajectory():
+    """Paper §3.3: r = min(m,n), rho=1 => GaLore follows the exact trajectory."""
+    key = jax.random.PRNGKey(0)
+    params = {"w": jax.random.normal(key, (16, 24))}
+    cfg = GaLoreConfig(rank=16, update_freq=1, scale=1.0, projector="svd")
+    opt = galore(identity_inner, cfg)
+    st = opt.init(params)
+    for i in range(3):
+        g = {"w": jax.random.normal(jax.random.fold_in(key, i), (16, 24))}
+        upd, st = opt.update(g, st, params)
+        np.testing.assert_allclose(upd["w"], g["w"], rtol=1e-5, atol=1e-5)
+
+
+def test_projection_side_selection():
+    params = {
+        "wide": jnp.zeros((64, 256)),   # m < n  -> left
+        "tall": jnp.zeros((256, 64)),   # m > n  -> right
+        "small": jnp.zeros((8, 8)),     # min <= rank -> no galore
+        "vec": jnp.zeros((128,)),       # 1-D -> no galore
+    }
+    plans = plan_for_params(params, GaLoreConfig(rank=16))
+    assert plans["wide"].galore and plans["wide"].side == "left"
+    assert plans["tall"].galore and plans["tall"].side == "right"
+    assert not plans["small"].galore
+    assert not plans["vec"].galore
+
+
+def test_memory_accounting_matches_paper_table1():
+    """GaLore Adam state: mn weights + mr projector + 2nr moments (m<=n)."""
+    m, n, r = 256, 1024, 64
+    params = {"w": jnp.zeros((m, n))}
+    acct = galore_state_bytes(params, GaLoreConfig(rank=r))
+    assert acct["adam_state_elems"] == m * r + 2 * (r * n)
+    # and it beats LoRA's optimizer states (2mr + 2nr) at equal rank
+    lora_states = 2 * m * r + 2 * n * r
+    assert acct["adam_state_elems"] < lora_states
+
+
+def test_stacked_leaf_projection_shapes():
+    params = {"experts": jnp.zeros((3, 4, 64, 96))}
+    opt = galore(scale_by_adam(), GaLoreConfig(rank=16, projector="newton_schulz"))
+    st = opt.init(params)
+    g = {"experts": jax.random.normal(jax.random.PRNGKey(0), (3, 4, 64, 96))}
+    upd, st = opt.update(g, st, params)
+    assert upd["experts"].shape == (3, 4, 64, 96)
+    assert st["proj"]["experts"].shape == (3, 4, 64, 16)
+    assert st["inner"]["m"]["experts"].shape == (3, 4, 16, 96)
+
+
+def test_external_refresh_equivalence():
+    """Inline-cond refresh vs external refresh: same P at the refresh step."""
+    key = jax.random.PRNGKey(1)
+    params = {"w": jax.random.normal(key, (32, 48))}
+    g = {"w": jax.random.normal(jax.random.fold_in(key, 1), (32, 48))}
+    cfg = GaLoreConfig(rank=8, update_freq=10, projector="svd")
+    inline = galore(identity_inner, cfg)
+    ext = galore(identity_inner, cfg, external_refresh=True)
+    st_i = inline.init(params)
+    st_e = ext.init(params)
+    # inline refreshes at step 0; external must be refreshed manually
+    st_e = refresh_projectors(g, st_e, cfg)
+    u_i, st_i = inline.update(g, st_i, params)
+    u_e, st_e = ext.update(g, st_e, params)
+    np.testing.assert_allclose(u_i["w"], u_e["w"], rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("method", ["svd", "randomized", "newton_schulz"])
+def test_projector_orthonormal_and_aligned(method):
+    key = jax.random.PRNGKey(2)
+    U = jnp.linalg.qr(jax.random.normal(key, (96, 16)))[0]
+    V = jnp.linalg.qr(jax.random.normal(jax.random.fold_in(key, 1), (64, 16)))[0]
+    s = jnp.logspace(2, 0, 16)
+    G = (U * s) @ V.T
+    P = compute_projector(G, 8, method=method, key=key)
+    assert P.shape == (96, 8)
+    ortho_err = float(jnp.max(jnp.abs(P.T @ P - jnp.eye(8))))
+    assert ortho_err < (1e-4 if method != "newton_schulz" else 5e-2)
+    P_ref = compute_projector(G, 8, method="svd")
+    assert float(subspace_overlap(P, P_ref)) > 0.95
+
+
+def test_theorem38_convergence_fixed_projection():
+    """Thm 3.8: gradient G = A - B W C (PSD B, C), rho=1, fixed P: ||R_t|| -> 0."""
+    key = jax.random.PRNGKey(3)
+    m, n = 12, 10
+    Bm = jax.random.normal(key, (m, m)); Bm = Bm @ Bm.T / m + 0.5 * jnp.eye(m)
+    Cm = jax.random.normal(jax.random.fold_in(key, 1), (n, n))
+    Cm = Cm @ Cm.T / n + 0.5 * jnp.eye(n)
+    W_star = jax.random.normal(jax.random.fold_in(key, 2), (m, n))
+    A = Bm @ W_star @ Cm  # so G = B (W* - W) C, zero at W*
+    W = jnp.zeros((m, n))
+    G0 = A - Bm @ W @ Cm
+    P = compute_projector(G0, 6, method="svd")
+    eta = 0.05
+    norms = []
+    for _ in range(200):
+        G = A - Bm @ W @ Cm
+        R = P.T @ G
+        norms.append(float(jnp.linalg.norm(R)))
+        W = W + eta * (P @ R)  # rho = 1, fixed projection
+    assert norms[-1] < norms[0] * 1e-2, norms[::50]
+
+
+def test_lemma33_stable_rank_decreases():
+    """Lemma 3.3: G_t = A - B W_t C under SGD => stable rank of G_t decays."""
+    key = jax.random.PRNGKey(4)
+    m, n = 24, 20
+    Bm = jax.random.normal(key, (m, m)); Bm = Bm @ Bm.T / m + 0.1 * jnp.eye(m)
+    Cm = jax.random.normal(jax.random.fold_in(key, 1), (n, n))
+    Cm = Cm @ Cm.T / n + 0.1 * jnp.eye(n)
+    A = jax.random.normal(jax.random.fold_in(key, 2), (m, n))
+    W = jnp.zeros((m, n))
+    eta = 0.02
+
+    def stable_rank(G):
+        s = jnp.linalg.svd(G, compute_uv=False)
+        return float(jnp.sum(s**2) / (s[0] ** 2))
+
+    G = A - Bm @ W @ Cm
+    sr0 = stable_rank(G)
+    for _ in range(300):
+        G = A - Bm @ W @ Cm
+        W = W + eta * G
+    sr_final = stable_rank(A - Bm @ W @ Cm)
+    assert sr_final < sr0 * 0.7, (sr0, sr_final)
+
+
+def test_galore_trains_tiny_model_close_to_adam():
+    """Quality parity on a tiny regression (paper Table 2 ordering, micro-scale)."""
+    key = jax.random.PRNGKey(5)
+    X = jax.random.normal(key, (128, 32))
+    W_true = jax.random.normal(jax.random.fold_in(key, 1), (32, 48))
+    Y = X @ W_true
+
+    def loss_fn(params):
+        return jnp.mean(jnp.square(X @ params["w"] - Y))
+
+    def train(opt, steps=150, lr=0.05):
+        params = {"w": jnp.zeros((32, 48))}
+        st = opt.init(params)
+        for _ in range(steps):
+            g = jax.grad(loss_fn)(params)
+            upd, st = opt.update(g, st, params)
+            params = apply_updates(params, jax.tree_util.tree_map(lambda u: -lr * u, upd))
+        return float(loss_fn(params))
+
+    init_loss = float(jnp.mean(jnp.square(Y)))
+    adam_loss = train(scale_by_adam())
+    galore_loss = train(galore(scale_by_adam(), GaLoreConfig(rank=16, update_freq=25, scale=1.0)))
+    # both reach a tiny fraction of the initial loss; full-rank Adam converges
+    # faster on pure linear regression (rank-16 subspace covers half the
+    # spectrum per period), which matches the paper's rank-vs-steps trade-off
+    assert adam_loss < 0.01 * init_loss
+    assert galore_loss < 0.01 * init_loss, (init_loss, adam_loss, galore_loss)

@@ -1,0 +1,133 @@
+"""Optimizer substrate: Adam/Adafactor/8-bit/SGD refs, schedules, baselines."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import GaLoreConfig, TrainConfig
+from repro.optim import quant8, schedules
+from repro.optim.adafactor import scale_by_adafactor
+from repro.optim.adam import scale_by_adam
+from repro.optim.adam8bit import scale_by_adam8bit
+from repro.optim.factory import build_optimizer
+from repro.optim.lowrank import LoraConfig, adaptor_param_count, init_adaptors, merge, relora_merge
+from repro.optim.transform import apply_updates, chain, clip_by_global_norm
+
+
+def test_adam_matches_manual_reference():
+    key = jax.random.PRNGKey(0)
+    opt = scale_by_adam(0.9, 0.999, 1e-8)
+    params = {"w": jnp.zeros((4, 4))}
+    st = opt.init(params)
+    m = v = jnp.zeros((4, 4))
+    for t in range(1, 5):
+        g = jax.random.normal(jax.random.fold_in(key, t), (4, 4))
+        upd, st = opt.update({"w": g}, st, params)
+        m = 0.9 * m + 0.1 * g
+        v = 0.999 * v + 0.001 * g * g
+        ref = (m / (1 - 0.9**t)) / (jnp.sqrt(v / (1 - 0.999**t)) + 1e-8)
+        np.testing.assert_allclose(upd["w"], ref, rtol=1e-4, atol=1e-5)
+
+
+def test_adam8bit_tracks_fp32_adam():
+    """Quantized moments track fp32 Adam within codebook resolution."""
+    key = jax.random.PRNGKey(1)
+    p = {"w": jnp.zeros((64, 64))}  # 4096 elements -> quantized
+    ref_opt, q_opt = scale_by_adam(), scale_by_adam8bit()
+    st_r, st_q = ref_opt.init(p), q_opt.init(p)
+    errs = []
+    for t in range(8):
+        g = {"w": jax.random.normal(jax.random.fold_in(key, t), (64, 64)) * 0.1}
+        u_r, st_r = ref_opt.update(g, st_r, p)
+        u_q, st_q = q_opt.update(g, st_q, p)
+        errs.append(float(jnp.mean(jnp.abs(u_r["w"] - u_q["w"]))))
+    assert errs[-1] < 0.08, errs  # updates are O(1) after normalization
+
+
+def test_adam8bit_small_leaves_stay_fp32():
+    p = {"small": jnp.zeros((8, 8)), "big": jnp.zeros((128, 128))}
+    st = scale_by_adam8bit().init(p)
+    assert st["mv"]["small"]["m"].dtype == jnp.float32
+    assert st["mv"]["big"]["m"]["q"].dtype == jnp.uint8
+    # memory: ~1 byte/elem + scale per 256 vs 4 bytes
+    big = st["mv"]["big"]
+    q_bytes = big["m"]["q"].size + big["m"]["scale"].size * 4
+    assert q_bytes < 128 * 128 * 4 / 3
+
+
+def test_adafactor_factored_second_moment_shapes():
+    p = {"w": jnp.zeros((32, 48)), "b": jnp.zeros((48,))}
+    opt = scale_by_adafactor(beta1=0.9)
+    st = opt.init(p)
+    assert st["v"]["w"]["vr"].shape == (32,)
+    assert st["v"]["w"]["vc"].shape == (48,)
+    assert st["v"]["b"]["v"].shape == (48,)
+    g = {"w": jnp.ones((32, 48)), "b": jnp.ones((48,))}
+    upd, st = opt.update(g, st, p)
+    assert all(bool(jnp.all(jnp.isfinite(l))) for l in jax.tree_util.tree_leaves(upd))
+
+
+def test_clip_by_global_norm():
+    opt = clip_by_global_norm(1.0)
+    g = {"a": jnp.full((10,), 10.0)}
+    upd, _ = opt.update(g, (), None)
+    assert abs(float(jnp.linalg.norm(upd["a"])) - 1.0) < 1e-4
+
+
+def test_warmup_cosine_schedule():
+    s = schedules.warmup_cosine(1.0, 10, 100)
+    assert float(s(jnp.asarray(5))) == pytest.approx(0.5, rel=1e-3)
+    assert float(s(jnp.asarray(10))) == pytest.approx(1.0, rel=1e-2)
+    assert float(s(jnp.asarray(100))) == pytest.approx(0.1, rel=0.05)
+
+
+@pytest.mark.parametrize("optname", ["adamw", "adam8bit", "adafactor", "sgd"])
+def test_factory_builds_and_steps_with_galore(optname):
+    """Fig 3: GaLore composes with AdamW / 8-bit Adam / Adafactor."""
+    tc = TrainConfig(optimizer=optname, galore=GaLoreConfig(rank=8, update_freq=5),
+                     lr=1e-3, total_steps=10, warmup_steps=2)
+    opt = build_optimizer(tc)
+    params = {"w": jnp.zeros((32, 64)), "b": jnp.zeros((64,))}
+    st = opt.init(params)
+    g = {"w": jax.random.normal(jax.random.PRNGKey(0), (32, 64)),
+         "b": jnp.ones((64,))}
+    upd, st = opt.update(g, st, params)
+    params = apply_updates(params, upd)
+    assert all(bool(jnp.all(jnp.isfinite(l))) for l in jax.tree_util.tree_leaves(params))
+
+
+def test_lora_merge_and_counts():
+    params = {"w": jnp.ones((64, 96)), "norm": jnp.ones((96,))}
+    cfg = LoraConfig(rank=4, alpha=32)
+    ad = init_adaptors(params, cfg, jax.random.PRNGKey(0))
+    assert ad["w"]["A"].shape == (4, 96) and ad["w"]["B"].shape == (64, 4)
+    assert not isinstance(ad["norm"], dict)
+    eff = merge(params, ad, cfg)
+    np.testing.assert_allclose(eff["w"], params["w"])  # B=0 at init
+    assert adaptor_param_count(ad) == 4 * 96 + 64 * 4
+    # gradient flows only to adaptors
+    def loss(a):
+        return jnp.sum(merge(params, a, cfg)["w"] ** 2)
+    g = jax.grad(loss)(ad)
+    assert float(jnp.max(jnp.abs(g["w"]["A"]))) >= 0  # exists
+
+
+def test_relora_merge_resets_adaptors():
+    params = {"w": jnp.zeros((32, 32))}
+    cfg = LoraConfig(rank=4, alpha=8, mode="relora")
+    key = jax.random.PRNGKey(1)
+    ad = init_adaptors(params, cfg, key)
+    ad["w"]["B"] = jnp.ones((32, 4))
+    new_p, new_ad = relora_merge(params, ad, cfg, jax.random.fold_in(key, 1))
+    expect = (cfg.alpha / cfg.rank) * jnp.ones((32, 4)) @ ad["w"]["A"]
+    np.testing.assert_allclose(new_p["w"], expect, rtol=1e-5)
+    np.testing.assert_allclose(new_ad["w"]["B"], 0.0)
+
+
+def test_quant8_codebooks():
+    s = quant8.dynamic_codebook(True)
+    u = quant8.dynamic_codebook(False)
+    assert s.size == 256 and u.size == 256
+    assert s.min() == -1.0 and s.max() == 1.0 and 0.0 in s
+    assert u.min() == 0.0 and u.max() == 1.0
+    assert np.all(np.diff(s) > 0)  # strictly sorted

@@ -1,0 +1,110 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import GaLoreConfig
+from repro.core.galore import galore, plan_for_params
+from repro.core.projector import compute_projector
+from repro.data.pipeline import DataConfig, SyntheticC4
+from repro.optim import quant8
+from repro.optim.adam import scale_by_adam
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(8, 64),
+    n=st.integers(8, 64),
+    r_frac=st.floats(0.2, 0.9),
+    seed=st.integers(0, 2**16),
+)
+def test_projector_always_orthonormal(m, n, r_frac, seed):
+    r = max(1, int(min(m, n) * r_frac))
+    G = jax.random.normal(jax.random.PRNGKey(seed), (m, n))
+    P = compute_projector(G, r, method="svd")
+    assert P.shape == (m, r)
+    err = float(jnp.max(jnp.abs(P.T @ P - jnp.eye(r))))
+    assert err < 1e-4
+
+
+@settings(**SETTINGS)
+@given(
+    scale=st.floats(1e-6, 1e4),
+    seed=st.integers(0, 2**16),
+)
+def test_quant_roundtrip_bounded_error(scale, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (4, quant8.BLOCK)) * scale
+    stq = quant8.quant_state(x, signed=True)
+    x2 = quant8.dequant_state(stq, x.shape, signed=True)
+    per_block_max = np.maximum(np.max(np.abs(np.asarray(x)), axis=1, keepdims=True), 1e-30)
+    rel = np.max(np.abs(np.asarray(x - x2)) / per_block_max)
+    assert rel < 0.05
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(4, 32),
+    n=st.integers(4, 32),
+    seed=st.integers(0, 2**16),
+)
+def test_galore_with_small_matrices_degenerates_to_inner(m, n, seed):
+    """Leaves below the rank threshold must pass through the inner optimizer
+    exactly (GaLore is the identity wrapper for them)."""
+    rank = max(m, n) + 1  # nothing qualifies
+    params = {"w": jnp.zeros((m, n))}
+    inner = scale_by_adam()
+    wrapped = galore(inner, GaLoreConfig(rank=rank))
+    g = {"w": jax.random.normal(jax.random.PRNGKey(seed), (m, n))}
+    u1, _ = inner.update(g, inner.init(params), params)
+    u2, _ = wrapped.update(g, wrapped.init(params), params)
+    np.testing.assert_allclose(u1["w"], u2["w"], rtol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(
+    step=st.integers(0, 1000),
+    hosts=st.integers(1, 8),
+    seed=st.integers(0, 2**10),
+)
+def test_data_pipeline_deterministic_and_disjoint(step, hosts, seed):
+    """Same (seed, host, step) -> identical batch; different hosts -> different."""
+    mk = lambda h: SyntheticC4(DataConfig(vocab_size=512, seq_len=32, batch_per_host=2,
+                                          seed=seed, n_hosts=hosts, host_id=h))
+    b1 = mk(0).batch(step)
+    b2 = mk(0).batch(step)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    if hosts > 1:
+        b3 = mk(1).batch(step)
+        assert not np.array_equal(np.asarray(b1["tokens"]), np.asarray(b3["tokens"]))
+
+
+@settings(**SETTINGS)
+@given(
+    lead=st.integers(1, 4),
+    m=st.integers(20, 48),
+    n=st.integers(20, 48),
+    seed=st.integers(0, 2**16),
+)
+def test_projection_roundtrip_contraction(lead, m, n, seed):
+    """P (PᵀG) never increases the Frobenius norm (orthogonal projection)."""
+    G = jax.random.normal(jax.random.PRNGKey(seed), (lead, m, n))
+    P = compute_projector(G, 8, method="svd")
+    R = jnp.einsum("lmr,lmn->lrn", P, G)
+    back = jnp.einsum("lmr,lrn->lmn", P, R)
+    assert float(jnp.linalg.norm(back)) <= float(jnp.linalg.norm(G)) * (1 + 1e-5)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**16))
+def test_plans_are_stable_across_grads_and_params(seed):
+    """plan(params) == plan(grads): structure-only decision."""
+    key = jax.random.PRNGKey(seed)
+    params = {"a": jnp.zeros((64, 32)), "b": jnp.zeros((16,))}
+    grads = {"a": jax.random.normal(key, (64, 32)), "b": jnp.ones((16,))}
+    cfg = GaLoreConfig(rank=8)
+    p1 = plan_for_params(params, cfg)
+    p2 = plan_for_params(grads, cfg)
+    assert p1 == p2

@@ -1,0 +1,110 @@
+"""End-to-end behaviour: training quality ordering, serving, fault tolerance."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import GaLoreConfig, TrainConfig, get_config
+from repro.launch.serve import Server
+from repro.launch.train import RunConfig, train_loop
+from repro.models import model as M
+
+
+def _run(tmp_path, tag, tc, steps=60):
+    run = RunConfig(arch="llama_60m", smoke=True, steps=steps, batch_per_host=4,
+                    seq_len=64, ckpt_dir=str(tmp_path / tag), ckpt_every=0, log_every=1000)
+    _, _, metrics, _ = train_loop(run, tc)
+    return float(metrics["loss"])
+
+
+def test_galore_comparable_to_fullrank_training(tmp_path):
+    """Paper Table 2 ordering at micro-scale: GaLore ≈ full-rank, both learn."""
+    full = _run(tmp_path, "full", TrainConfig(optimizer="adamw", lr=5e-3,
+                                              total_steps=60, warmup_steps=5))
+    gal = _run(tmp_path, "galore", TrainConfig(
+        optimizer="adamw", lr=5e-3, total_steps=60, warmup_steps=5,
+        galore=GaLoreConfig(rank=16, update_freq=20, scale=0.25)))
+    # init loss = ln(512) ≈ 6.24; both must learn, and GaLore must stay close
+    assert full < 6.1 and gal < 6.1, (full, gal)
+    assert abs(full - gal) < 0.6, (full, gal)
+
+
+def test_preemption_checkpoint_and_exit(tmp_path):
+    ckpt_dir = tmp_path / "pre"
+    os.makedirs(ckpt_dir, exist_ok=True)
+    tc = TrainConfig(optimizer="adamw", lr=1e-3, total_steps=50, warmup_steps=2)
+    run = RunConfig(arch="llama_60m", smoke=True, steps=50, batch_per_host=2,
+                    seq_len=32, ckpt_dir=str(ckpt_dir), ckpt_every=0, log_every=1000)
+
+    def on_step(step, metrics):
+        if step == 5:
+            open(ckpt_dir / "PREEMPT", "w").close()
+
+    *_, last = train_loop(run, tc, on_step=on_step)
+    assert last <= 7  # exited early
+    from repro.checkpoint.manager import CheckpointManager
+
+    assert CheckpointManager(str(ckpt_dir)).latest_step() == last
+
+
+def test_serve_generates_tokens():
+    cfg = get_config("qwen2_7b", smoke=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    srv = Server(cfg, params, max_len=64, slots=4)
+    outs = srv.generate([jnp.arange(5), jnp.arange(3)], max_new=6)
+    assert len(outs) == 2 and all(len(o) == 6 for o in outs)
+    assert all(0 <= t < cfg.padded_vocab for o in outs for t in o)
+
+
+def test_serve_decode_matches_forward_greedy():
+    """Greedy serve path reproduces argmax of the full forward pass."""
+    cfg = get_config("llama_60m", smoke=True)
+    key = jax.random.PRNGKey(1)
+    params = M.init_params(cfg, key)
+    prompt = jnp.asarray([3, 1, 4, 1, 5], jnp.int32)
+    srv = Server(cfg, params, max_len=32, slots=2)
+    out = srv.generate([prompt], max_new=3)[0]
+    # manual greedy rollout with full forwards
+    toks = list(map(int, prompt))
+    for _ in range(3):
+        logits, _, _ = M.forward(cfg, params, {"tokens": jnp.asarray([toks], jnp.int32)})
+        toks.append(int(jnp.argmax(logits[0, -1])))
+    assert out == toks[len(prompt):], (out, toks[len(prompt):])
+
+
+def test_galore_dominates_naive_lowrank(tmp_path):
+    """Paper's key qualitative claim: GaLore >> naive low-rank factorization."""
+    from repro.optim.lowrank import LoraConfig, init_adaptors, merge
+    from repro.optim.adam import scale_by_adam
+    from repro.optim.transform import apply_updates
+
+    cfg = get_config("llama_60m", smoke=True)
+    key = jax.random.PRNGKey(2)
+    base = M.init_params(cfg, key)
+    from repro.data.pipeline import DataConfig, SyntheticC4
+
+    data = SyntheticC4(DataConfig(vocab_size=cfg.vocab_size, seq_len=64, batch_per_host=4))
+
+    lcfg = LoraConfig(rank=4, alpha=4, mode="lowrank")
+    adaptors = init_adaptors(base, lcfg, key)
+    opt = scale_by_adam()
+    st = opt.init(adaptors)
+
+    def loss_fn(ad, batch):
+        eff = merge(base, ad, lcfg)
+        return M.loss_fn(cfg, eff, batch)[0]
+
+    lr = 5e-3
+    for i in range(40):
+        batch = data.batch(i)
+        g = jax.grad(loss_fn)(adaptors, batch)
+        upd, st = opt.update(g, st, adaptors)
+        adaptors = apply_updates(adaptors, jax.tree_util.tree_map(lambda u: -lr * u, upd))
+    lowrank_loss = float(loss_fn(adaptors, data.batch(100)))
+    # GaLore (full-parameter learning) from scratch, same budget
+    galore_loss = _run(tmp_path, "galore_vs_lowrank", TrainConfig(
+        optimizer="adamw", lr=5e-3, total_steps=40, warmup_steps=4,
+        galore=GaLoreConfig(rank=4, update_freq=20, scale=0.25)), steps=40)
+    assert galore_loss < lowrank_loss, (galore_loss, lowrank_loss)
