@@ -20,6 +20,7 @@ def main() -> None:
     from benchmarks import (
         fig3_optimizers,
         fig5_ablations,
+        kernel_bench,
         memory_breakdown,
         roofline,
         table2_methods,
@@ -33,6 +34,7 @@ def main() -> None:
         ("fig5_ablations", fig5_ablations.main),       # Fig 5
         ("table11_throughput", table11_throughput.main),  # Table 11
         ("roofline", roofline.main),                   # deliverable (g)
+        ("kernel_bench", kernel_bench.main),           # fused vs unfused GaLore-Adam
     ]
     print("name,us_per_call,derived")
     failures = 0

@@ -144,6 +144,8 @@ class TrainConfig:
     microbatch: int = 0  # >0 -> gradient accumulation
     galore_dp_compress: bool = False  # beyond-paper: all-reduce projected grads
     galore_external_refresh: bool = False  # refresh P in a separate jitted step
+    galore_fused_adam: bool = False  # single-kernel project→Adam→back per leaf
+    # (requires optimizer adam/adamw; see kernels/galore_fused.py)
     z_loss: float = 0.0
 
 

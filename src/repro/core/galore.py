@@ -14,6 +14,10 @@ at full shape, exactly as the paper treats them.
 Leaves may carry leading batch dims (stacked layers (L, m, n) or stacked
 experts (L, E, m, n)) — projection and refresh vmap over them.
 
+When the inner optimizer is plain Adam, `fused_adam=True` collapses steps
+2-4 into one Pallas kernel per leaf (kernels/galore_fused.py) with identical
+numerics and state layout; the composable path here is the oracle.
+
 State layout:
     {"step", "key", "proj": {path-matching subtree of P arrays}, "inner": ...}
 """
@@ -114,6 +118,10 @@ def galore(
     param_axes=None,
     external_refresh: bool = False,
     pre_projected: bool = False,
+    fused_adam: bool = False,
+    b1: float | None = None,
+    b2: float | None = None,
+    eps: float | None = None,
 ) -> GradientTransformation:
     """external_refresh=True removes the in-step `lax.cond` SVD refresh —
     the launcher then calls `refresh_projectors` every T steps as a separate
@@ -125,7 +133,27 @@ def galore(
     pre_projected=True: galore-leaf gradients arrive ALREADY in the compact
     space (the GaLore-DP compressed all-reduce path, distributed/step.py) —
     projection is skipped, back-projection still applies. Implies
-    external_refresh."""
+    external_refresh.
+
+    fused_adam=True: the hot path. Requires `inner` to be plain Adam
+    (scale_by_adam-shaped state {m, v, count}; b1/b2/eps must match). GaLore
+    leaves bypass the composable project → inner.update → back-project
+    sequence and run `ops.galore_fused_adam_step` — one Pallas kernel per
+    leaf that keeps R/N̂ in VMEM and updates the compact moments in place;
+    non-galore leaves get the identical Adam math at full shape. State
+    layout is unchanged (checkpoints swap freely between the two paths),
+    and the composable path remains the numerics oracle. Right-side leaves
+    (m > n) run the kernel on transposed views. Incompatible with
+    pre_projected (fused path wants the full-shape gradient). b1/b2/eps are
+    required with fused_adam and MUST equal the inner Adam's hyperparameters
+    — the fused kernel computes the moment math itself, and a mismatch would
+    silently diverge from the composable oracle."""
+    if fused_adam and pre_projected:
+        raise ValueError("fused_adam is incompatible with pre_projected gradients")
+    if fused_adam and None in (b1, b2, eps):
+        raise ValueError(
+            "fused_adam=True requires explicit b1/b2/eps matching the inner Adam"
+        )
     def init(params):
         plans = plan_for_params(params, cfg, exclude, param_axes)
 
@@ -172,25 +200,33 @@ def galore(
 
             proj = jax.tree_util.tree_map(refresh_leaf, grads, state["proj"], plans)
 
-        # --- 2) project gradients into the compact space ---
-        def proj_leaf(g, P, plan):
-            if not plan.galore or pre_projected:
-                return g
-            return _project(g, P, plan)
+        if fused_adam:
+            # --- 2-4 fused) one kernel per galore leaf: project → Adam →
+            # back-project without materializing R/N̂ (ops dispatches Pallas
+            # on TPU, the ref oracle elsewhere) ---
+            updates, inner_state = _fused_adam_update(
+                grads, proj, state["inner"], plans, cfg, b1, b2, eps
+            )
+        else:
+            # --- 2) project gradients into the compact space ---
+            def proj_leaf(g, P, plan):
+                if not plan.galore or pre_projected:
+                    return g
+                return _project(g, P, plan)
 
-        lor_grads = jax.tree_util.tree_map(proj_leaf, grads, proj, plans)
+            lor_grads = jax.tree_util.tree_map(proj_leaf, grads, proj, plans)
 
-        # --- 3) inner optimizer in the compact space ---
-        lor_updates, inner_state = inner.update(lor_grads, state["inner"], params)
+            # --- 3) inner optimizer in the compact space ---
+            lor_updates, inner_state = inner.update(lor_grads, state["inner"], params)
 
-        # --- 4) project back + alpha scale ---
-        def back_leaf(u, P, plan):
-            if not plan.galore:
-                return u
-            full = _project_back(u.astype(jnp.float32), P, plan)
-            return cfg.scale * full  # apply_updates casts to the param dtype
+            # --- 4) project back + alpha scale ---
+            def back_leaf(u, P, plan):
+                if not plan.galore:
+                    return u
+                full = _project_back(u.astype(jnp.float32), P, plan)
+                return cfg.scale * full  # apply_updates casts to the param dtype
 
-        updates = jax.tree_util.tree_map(back_leaf, lor_updates, proj, plans)
+            updates = jax.tree_util.tree_map(back_leaf, lor_updates, proj, plans)
         new_state = {
             "step": step + 1,
             "key": state["key"],
@@ -200,6 +236,53 @@ def galore(
         return updates, new_state
 
     return GradientTransformation(init, update)
+
+
+def _fused_adam_update(grads, proj, inner_state, plans, cfg: GaLoreConfig,
+                       b1: float, b2: float, eps: float):
+    """Adam step bypassing the generic inner transform (the fused fast path).
+
+    Galore leaves run `ops.galore_fused_adam_step` (single HBM pass, moments
+    updated in place); other leaves get the same Adam math at full shape.
+    Reads and writes the scale_by_adam state layout {m, v, count}."""
+    from repro.kernels import ops, ref
+
+    count = inner_state["count"] + 1
+
+    def leaf(g, P, m, v, plan):
+        if not plan.galore:
+            # same bias-corrected Adam math as the kernel, from the single
+            # source of truth (also what scale_by_adam computes)
+            out, m_t, v_t = ref.lowrank_adam_update(g, m, v, count, b1, b2, eps)
+            return out.astype(g.dtype), m_t, v_t
+        gk, mk, vk = g, m, v
+        if plan.side == "right":
+            # kernel computes the left form; a right-side leaf is its exact
+            # transpose (R = GP ⇔ Rᵀ = PᵀGᵀ), so run on swapped views
+            gk, mk, vk = (jnp.swapaxes(x, -1, -2) for x in (g, m, v))
+        upd, m_t, v_t = ops.galore_fused_adam_step(
+            P, gk, mk, vk, count, b1=b1, b2=b2, eps=eps, alpha=cfg.scale
+        )
+        if plan.side == "right":
+            upd, m_t, v_t = (jnp.swapaxes(x, -1, -2) for x in (upd, m_t, v_t))
+        upd = logical_constraint(upd, *_lead(upd, plan.ax_m, plan.ax_n))
+        return upd, m_t, v_t
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat = [
+        leaf(g, P, m, v, plan)
+        for g, P, m, v, plan in zip(
+            flat_g,
+            treedef.flatten_up_to(proj),
+            treedef.flatten_up_to(inner_state["m"]),
+            treedef.flatten_up_to(inner_state["v"]),
+            treedef.flatten_up_to(plans),
+        )
+    ]
+    updates = treedef.unflatten([t[0] for t in flat])
+    new_m = treedef.unflatten([t[1] for t in flat])
+    new_v = treedef.unflatten([t[2] for t in flat])
+    return updates, {"m": new_m, "v": new_v, "count": count}
 
 
 def _compute_leaf_projector(g, plan: LeafPlan, cfg: GaLoreConfig, key):

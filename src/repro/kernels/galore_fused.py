@@ -1,0 +1,191 @@
+"""Fused GaLore→Adam→back-project Pallas TPU kernel.
+
+One `pallas_call` computes the entire GaLore-Adam leaf update (paper Alg. 2):
+
+    R  = Pᵀ G                               (MXU, f32 accumulate)
+    M' = β₁ M + (1-β₁) R                    (VPU, in VMEM)
+    V' = β₂ V + (1-β₂) R²
+    N̂  = (M'/c₁) / (√(V'/c₂) + ε)
+    G̃  = α · P N̂                            (MXU)
+
+The unfused sequence (`galore_project` → `lowrank_adam_update` →
+`galore_project_back`) writes R to HBM, reads it back with M/V, writes N̂,
+and reads N̂ plus a second copy of P — for a memory-bound op that traffic is
+the step time. Here R and N̂ live only in the f32 VMEM accumulator and P is
+read once; HBM sees exactly one read of {P, G, M, V} and one write of
+{G̃, M', V'} per leaf (see EXPERIMENTS.md §Perf for the analytic accounting).
+
+Tiling scheme
+-------------
+Grid = (L, ⌈n / bn⌉): a leading batch dimension over stacked layers/experts
+(L = 1 for plain 2-D leaves) and a sweep over column tiles of the long side.
+Per grid step the kernel holds in VMEM:
+
+    P  (m, r)   — whole projector, index map is constant in j, so the Pallas
+                  pipeline fetches it once per batch element and keeps it
+                  resident across the column sweep;
+    G  (m, bn)  — one gradient column tile;
+    M,V (r, bn) — the matching compact-moment column tiles;
+    accumulators — R/N̂ (r, bn) and G̃ (m, bn) f32 registers.
+
+Both matmuls contract in one `dot_general` each (no k-loop): the projection
+contracts the full m inside the tile, the back-projection the full r. This
+is exactly the GaLore regime — P projects the SHORT side, so m = min(m, n)
+and r ≪ m both fit comfortably on chip.
+
+VMEM budget
+-----------
+bytes ≈ P·4 + 2·(G·s + M·4 + V·4 + G̃·4 + M'·4 + V'·4) for input itemsize s
+(the ×2 is pipeline double-buffering; P is single-buffered since its block
+index never changes within a batch element). `_pick_bn` shrinks the column
+tile from DEFAULT_BN until this fits VMEM_BUDGET (12 MB of the ~16 MB/core),
+so e.g. (m=4096, r=128, bf16 G) lands at bn=128 in ≈ 9 MB while a compact
+(m=1024, r=128) leaf keeps the full bn=512 tile. If even bn=128 does not
+fit (m·r·4 alone near the budget — only hit when the projected side is tens
+of thousands of rows), a ValueError directs callers to the unfused kernels.
+
+Aliasing contract
+-----------------
+`input_output_aliases={2: 1, 3: 2}`: the M and V inputs are donated and
+updated in place (their HBM buffers become the M', V' outputs). Callers must
+treat the passed-in M/V arrays as consumed — jit'd callers get this for free
+from XLA buffer donation; eager callers must not reuse the inputs. Ragged
+(m, n, r) are safe with no in-kernel masking: m and r are spanned whole by
+every block, and last-column-tile padding on the swept n axis only ever
+produces out-of-bounds output columns, which Pallas discards.
+
+dtypes: P/G accept f32 or bf16; M/V must be f32 (they are the optimizer
+state of record); G̃/M'/V' are emitted f32, matching the unfused path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.galore_project import _batch
+
+DEFAULT_BN = 512
+VMEM_BUDGET = 12 * 1024 * 1024  # leave headroom out of ~16 MB/core
+
+
+def _pick_bn(m: int, r: int, n: int, g_itemsize: int, bn0: int) -> int:
+    """Largest column tile (≤ bn0, ≥ 128 lane-aligned) fitting VMEM_BUDGET."""
+    p_bytes = m * r * 4
+    tile_bytes = lambda bn: 2 * (m * bn * g_itemsize + 4 * r * bn * 4 + m * bn * 4)
+    bn = min(bn0, n)
+    while p_bytes + tile_bytes(bn) > VMEM_BUDGET and bn > 128:
+        bn //= 2
+    if p_bytes + tile_bytes(min(bn, 128)) > VMEM_BUDGET:
+        raise ValueError(
+            f"galore_fused: P ({m}×{r}) + minimal tiles exceed VMEM budget "
+            f"({VMEM_BUDGET} B); use the unfused galore_project path"
+        )
+    return bn
+
+
+def fits_vmem(m: int, r: int, n: int, g_itemsize: int, bn0: int = None) -> bool:
+    """True if the fused kernel's VMEM budget admits this leaf shape (the
+    dispatch predicate — callers route to the unfused kernels otherwise)."""
+    try:
+        _pick_bn(m, r, n, g_itemsize, bn0 or DEFAULT_BN)
+        return True
+    except ValueError:
+        return False
+
+
+def _fused_kernel(
+    p_ref, g_ref, m_ref, v_ref, count_ref,
+    out_ref, m_out_ref, v_out_ref,
+    *, b1: float, b2: float, eps: float, alpha: float,
+):
+    # blocks carry a leading batch dim of 1. The m and r dims are spanned by
+    # the whole block (never grid-swept), so no part of p/m/v blocks is out
+    # of bounds; only the n axis is tiled, and garbage in the last column
+    # tile's padding stays column-local through every op below (both matmuls
+    # contract over m/r, the Adam math is elementwise) and lands exclusively
+    # in out-of-bounds output columns, which Pallas drops.
+    p = p_ref[0].astype(jnp.float32)   # (m, r)
+    g = g_ref[0].astype(jnp.float32)   # (m, bn)
+
+    # R = Pᵀ G on the MXU, f32 accumulate
+    R = jax.lax.dot_general(
+        p, g, dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (r, bn)
+
+    # Adam moment update + bias-corrected normalization, all in VMEM
+    m_new = b1 * m_ref[0] + (1.0 - b1) * R
+    v_new = b2 * v_ref[0] + (1.0 - b2) * R * R
+    count = count_ref[0].astype(jnp.float32)
+    c1 = 1.0 - b1 ** count
+    c2 = 1.0 - b2 ** count
+    n_hat = (m_new / c1) / (jnp.sqrt(v_new / c2) + eps)
+
+    # G̃ = α P N̂ (MXU)
+    out_ref[0] = alpha * jax.lax.dot_general(
+        p, n_hat, dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_out_ref[0] = m_new
+    v_out_ref[0] = v_new
+
+
+def galore_fused_adam_step(
+    P, G, M, V, count,
+    *, b1=0.9, b2=0.999, eps=1e-8, alpha=1.0,
+    bn=DEFAULT_BN, interpret: bool = False,
+):
+    """Fused left-side GaLore-Adam step.
+
+    P (..., m, r), G (..., m, n), M/V (..., r, n) f32, count scalar int32.
+    Leading dims (stacked layers / experts) are flattened into one batch grid
+    axis, so an (L, E, m, n) leaf is a single `pallas_call`. Returns
+    (G̃ (..., m, n) f32, M' , V'); M/V are updated in place via
+    input_output_aliases — treat the inputs as donated.
+    """
+    m, n = G.shape[-2:]
+    r = P.shape[-1]
+    assert P.shape[-2] == m, (P.shape, G.shape)
+    assert M.shape[-2:] == (r, n) and V.shape[-2:] == (r, n), (M.shape, V.shape)
+    assert M.dtype == jnp.float32 and V.dtype == jnp.float32, (M.dtype, V.dtype)
+    Pb, lead = _batch(P)
+    Gb, lead_g = _batch(G)
+    Mb, lead_m = _batch(M)
+    Vb, lead_v = _batch(V)
+    assert lead == lead_g == lead_m == lead_v, (P.shape, G.shape, M.shape, V.shape)
+    L = Gb.shape[0]
+
+    bn = _pick_bn(m, r, n, Gb.dtype.itemsize, bn)
+    grid = (L, pl.cdiv(n, bn))
+    out_shapes = (
+        jax.ShapeDtypeStruct((L, m, n), jnp.float32),
+        jax.ShapeDtypeStruct((L, r, n), jnp.float32),
+        jax.ShapeDtypeStruct((L, r, n), jnp.float32),
+    )
+    out, m_new, v_new = pl.pallas_call(
+        functools.partial(_fused_kernel, b1=b1, b2=b2, eps=eps, alpha=alpha),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, m, r), lambda l, j: (l, 0, 0)),   # P: resident per l
+            pl.BlockSpec((1, m, bn), lambda l, j: (l, 0, j)),  # G column tile
+            pl.BlockSpec((1, r, bn), lambda l, j: (l, 0, j)),  # M
+            pl.BlockSpec((1, r, bn), lambda l, j: (l, 0, j)),  # V
+            pl.BlockSpec((1,), lambda l, j: (0,)),             # count
+        ],
+        out_specs=(
+            pl.BlockSpec((1, m, bn), lambda l, j: (l, 0, j)),
+            pl.BlockSpec((1, r, bn), lambda l, j: (l, 0, j)),
+            pl.BlockSpec((1, r, bn), lambda l, j: (l, 0, j)),
+        ),
+        out_shape=out_shapes,
+        input_output_aliases={2: 1, 3: 2},  # M→M', V→V' updated in place
+        interpret=interpret,
+    )(Pb, Gb, Mb, Vb, count.reshape(1))
+    return (
+        out.reshape(*lead, m, n),
+        m_new.reshape(*lead, r, n),
+        v_new.reshape(*lead, r, n),
+    )

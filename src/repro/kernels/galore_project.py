@@ -3,13 +3,19 @@
 R = Pᵀ G        (project the gradient into the compact space)
 G̃ = α · P N     (project the normalized update back)
 
-Tiling (TPU v5e): the grid iterates (rows, cols, contraction); each step
-loads one (bk × bm)/(bk × bn) pair of VMEM tiles, accumulates the partial
-product into an f32 VMEM scratch accumulator on the MXU, and writes the tile
-out on the last contraction step. Block sizes default to 512×512×512
-(≈ 1.5 MB of bf16 tiles + 1 MB f32 accumulator — comfortably inside the
-~16 MB VMEM), and every dimension is padded by BlockSpec to multiples of the
-tile, so arbitrary (m, n, r) work. MXU dims stay multiples of 128.
+Tiling (TPU v5e): the grid iterates (batch, rows, cols, contraction); each
+step loads one (bk × bm)/(bk × bn) pair of VMEM tiles, accumulates the
+partial product into an f32 VMEM scratch accumulator on the MXU, and writes
+the tile out on the last contraction step. Block sizes default to
+512×512×512 (≈ 1.5 MB of bf16 tiles + 1 MB f32 accumulator — comfortably
+inside the ~16 MB VMEM), and every dimension is padded by BlockSpec to
+multiples of the tile, so arbitrary (m, n, r) work. MXU dims stay multiples
+of 128.
+
+Stacked leaves: inputs may carry leading batch dims — stacked layers
+(L, m, n) or stacked experts (L, E, m, n). Leading dims are flattened into
+one leading grid axis, so the whole stack is a SINGLE `pallas_call` instead
+of L vmapped launches (one kernel launch + one pipeline per leaf).
 """
 from __future__ import annotations
 
@@ -23,19 +29,28 @@ from jax.experimental.pallas import tpu as pltpu
 DEFAULT_BLOCK = 512
 
 
-def _project_kernel(p_ref, g_ref, out_ref, acc_ref, *, k_steps: int, k_total: int):
-    """out[r, n] += sum_m p[m, r] * g[m, n] — contraction over grid axis 2."""
+def _batch(x, tail_ndim=2):
+    """(..., a, b) -> (L, a, b) plus the original leading shape."""
+    lead = x.shape[:-tail_ndim]
+    L = 1
+    for d in lead:
+        L *= d
+    return x.reshape((L,) + x.shape[-tail_ndim:]), lead
 
-    @pl.when(pl.program_id(2) == 0)
+
+def _project_kernel(p_ref, g_ref, out_ref, acc_ref, *, k_steps: int, k_total: int):
+    """out[r, n] += sum_m p[m, r] * g[m, n] — contraction over grid axis 3."""
+
+    @pl.when(pl.program_id(3) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     # mask rows of the padded final contraction tile (OOB reads are garbage)
-    bm = p_ref.shape[0]
-    k_idx = pl.program_id(2) * bm + jax.lax.broadcasted_iota(jnp.int32, (bm, 1), 0)
+    bm = p_ref.shape[1]
+    k_idx = pl.program_id(3) * bm + jax.lax.broadcasted_iota(jnp.int32, (bm, 1), 0)
     valid = k_idx < k_total
-    p_tile = jnp.where(valid, p_ref[...], 0)
-    g_tile = jnp.where(valid, g_ref[...], 0)
+    p_tile = jnp.where(valid, p_ref[0], 0)
+    g_tile = jnp.where(valid, g_ref[0], 0)
     acc_ref[...] += jax.lax.dot_general(
         p_tile,
         g_tile,
@@ -43,44 +58,48 @@ def _project_kernel(p_ref, g_ref, out_ref, acc_ref, *, k_steps: int, k_total: in
         preferred_element_type=jnp.float32,
     )
 
-    @pl.when(pl.program_id(2) == k_steps - 1)
+    @pl.when(pl.program_id(3) == k_steps - 1)
     def _flush():
-        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+        out_ref[0] = acc_ref[...].astype(out_ref.dtype)
 
 
 def galore_project(P, G, *, block=DEFAULT_BLOCK, interpret: bool = False):
-    """R = Pᵀ G.  P (m, r), G (m, n) -> R (r, n) f32."""
-    m, r = P.shape
-    m2, n = G.shape
-    assert m == m2, (P.shape, G.shape)
+    """R = Pᵀ G.  P (..., m, r), G (..., m, n) -> R (..., r, n) f32."""
+    Pb, lead = _batch(P)
+    Gb, lead_g = _batch(G)
+    assert lead == lead_g, (P.shape, G.shape)
+    L, m, r = Pb.shape
+    L2, m2, n = Gb.shape
+    assert m == m2 and L == L2, (P.shape, G.shape)
     br, bn, bm = min(block, r), min(block, n), min(block, m)
-    grid = (pl.cdiv(r, br), pl.cdiv(n, bn), pl.cdiv(m, bm))
-    return pl.pallas_call(
-        functools.partial(_project_kernel, k_steps=grid[2], k_total=m),
+    grid = (L, pl.cdiv(r, br), pl.cdiv(n, bn), pl.cdiv(m, bm))
+    out = pl.pallas_call(
+        functools.partial(_project_kernel, k_steps=grid[3], k_total=m),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((bm, br), lambda i, j, k: (k, i)),
-            pl.BlockSpec((bm, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, bm, br), lambda l, i, j, k: (l, k, i)),
+            pl.BlockSpec((1, bm, bn), lambda l, i, j, k: (l, k, j)),
         ],
-        out_specs=pl.BlockSpec((br, bn), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((r, n), jnp.float32),
+        out_specs=pl.BlockSpec((1, br, bn), lambda l, i, j, k: (l, i, j)),
+        out_shape=jax.ShapeDtypeStruct((L, r, n), jnp.float32),
         scratch_shapes=[pltpu.VMEM((br, bn), jnp.float32)],  # f32 accumulator tile
         interpret=interpret,
-    )(P, G)
+    )(Pb, Gb)
+    return out.reshape(*lead, r, n)
 
 
 def _back_kernel(p_ref, n_ref, out_ref, acc_ref, *, k_steps: int, k_total: int, alpha: float):
     """out[m, n] += alpha * sum_r p[m, r] * nrm[r, n]."""
 
-    @pl.when(pl.program_id(2) == 0)
+    @pl.when(pl.program_id(3) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    br = n_ref.shape[0]
-    k_idx = pl.program_id(2) * br + jax.lax.broadcasted_iota(jnp.int32, (1, br), 1)
+    br = n_ref.shape[1]
+    k_idx = pl.program_id(3) * br + jax.lax.broadcasted_iota(jnp.int32, (1, br), 1)
     valid = k_idx < k_total
-    p_tile = jnp.where(valid, p_ref[...], 0)
-    n_tile = jnp.where(valid.reshape(br, 1), n_ref[...], 0)
+    p_tile = jnp.where(valid, p_ref[0], 0)
+    n_tile = jnp.where(valid.reshape(br, 1), n_ref[0], 0)
     acc_ref[...] += jax.lax.dot_general(
         p_tile,
         n_tile,
@@ -88,27 +107,31 @@ def _back_kernel(p_ref, n_ref, out_ref, acc_ref, *, k_steps: int, k_total: int, 
         preferred_element_type=jnp.float32,
     )
 
-    @pl.when(pl.program_id(2) == k_steps - 1)
+    @pl.when(pl.program_id(3) == k_steps - 1)
     def _flush():
-        out_ref[...] = (alpha * acc_ref[...]).astype(out_ref.dtype)
+        out_ref[0] = (alpha * acc_ref[...]).astype(out_ref.dtype)
 
 
 def galore_project_back(P, N, alpha: float, *, block=DEFAULT_BLOCK, interpret: bool = False):
-    """G̃ = α P N.  P (m, r), N (r, n) -> (m, n) f32."""
-    m, r = P.shape
-    r2, n = N.shape
-    assert r == r2, (P.shape, N.shape)
+    """G̃ = α P N.  P (..., m, r), N (..., r, n) -> (..., m, n) f32."""
+    Pb, lead = _batch(P)
+    Nb, lead_n = _batch(N)
+    assert lead == lead_n, (P.shape, N.shape)
+    L, m, r = Pb.shape
+    L2, r2, n = Nb.shape
+    assert r == r2 and L == L2, (P.shape, N.shape)
     bm, bn, br = min(block, m), min(block, n), min(block, r)
-    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(r, br))
-    return pl.pallas_call(
-        functools.partial(_back_kernel, k_steps=grid[2], k_total=r, alpha=alpha),
+    grid = (L, pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(r, br))
+    out = pl.pallas_call(
+        functools.partial(_back_kernel, k_steps=grid[3], k_total=r, alpha=alpha),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((bm, br), lambda i, j, k: (i, k)),
-            pl.BlockSpec((br, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, bm, br), lambda l, i, j, k: (l, i, k)),
+            pl.BlockSpec((1, br, bn), lambda l, i, j, k: (l, k, j)),
         ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        out_specs=pl.BlockSpec((1, bm, bn), lambda l, i, j, k: (l, i, j)),
+        out_shape=jax.ShapeDtypeStruct((L, m, n), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
-    )(P, N)
+    )(Pb, Nb)
+    return out.reshape(*lead, m, n)

@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import adam8bit_update as adam8bit_k
+from repro.kernels import galore_fused as galore_fused_k
 from repro.kernels import galore_project as galore_k
 from repro.kernels import ref
 from repro.kernels import rmsnorm as rmsnorm_k
@@ -27,17 +28,40 @@ def _resolve(use_pallas):
 
 
 def galore_project(P, G, *, use_pallas=None, interpret=False):
-    """R = Pᵀ G."""
+    """R = Pᵀ G. Leading batch dims (stacked layers/experts) run as one
+    batched-grid kernel launch."""
     if _resolve(use_pallas):
         return galore_k.galore_project(P, G, interpret=interpret)
     return ref.galore_project(P, G)
 
 
 def galore_project_back(P, N, alpha: float, *, use_pallas=None, interpret=False):
-    """G̃ = α P N."""
+    """G̃ = α P N. Leading batch dims run as one batched-grid kernel launch."""
     if _resolve(use_pallas):
         return galore_k.galore_project_back(P, N, alpha, interpret=interpret)
     return ref.galore_project_back(P, N, alpha)
+
+
+def galore_fused_adam_step(P, G, M, V, count, *, b1=0.9, b2=0.999, eps=1e-8,
+                           alpha=1.0, use_pallas=None, interpret=False):
+    """Entire GaLore-Adam leaf update in one pass: R = PᵀG → Adam(M, V) →
+    G̃ = α P N̂, with M/V updated in place (input_output_aliases) and the
+    intermediates R/N̂ never leaving VMEM. Returns (G̃, M', V').
+
+    Falls back to the unfused kernels (via the pure-jnp composition) when the
+    fused kernel's VMEM budget rejects the shape — see galore_fused.py."""
+    if _resolve(use_pallas):
+        m, n = G.shape[-2:]
+        if galore_fused_k.fits_vmem(m, P.shape[-1], n, G.dtype.itemsize):
+            return galore_fused_k.galore_fused_adam_step(
+                P, G, M, V, count, b1=b1, b2=b2, eps=eps, alpha=alpha,
+                interpret=interpret,
+            )
+        # P too large for VMEM residency — compose the tiled kernels
+        R = galore_k.galore_project(P, G, interpret=interpret)
+        N, M_t, V_t = ref.lowrank_adam_update(R, M, V, count, b1, b2, eps)
+        return galore_k.galore_project_back(P, N, alpha, interpret=interpret), M_t, V_t
+    return ref.galore_fused_adam_step(P, G, M, V, count, b1, b2, eps, alpha)
 
 
 def adam8bit_step(g_blocks, m_codes, m_scale, v_codes, v_scale, count,
@@ -63,6 +87,9 @@ def rmsnorm(x, scale, *, eps=1e-6, use_pallas=None, interpret=False):
 
 
 def lowrank_adam_update(R, M, V, count, *, b1=0.9, b2=0.999, eps=1e-8):
-    """Fused compact-space Adam (reference; the Pallas path fuses this into
-    galore_project_back's epilogue on TPU — see EXPERIMENTS.md §Perf)."""
+    """Compact-space Adam on a pre-projected R (pure-jnp; XLA fuses the
+    elementwise chain). On TPU the hot path should not call this at all —
+    `galore_fused_adam_step` folds the projection, this update, and the
+    back-projection into one kernel so R/N̂ never round-trip HBM (measured
+    and analytic traffic in EXPERIMENTS.md §Perf)."""
     return ref.lowrank_adam_update(R, M, V, count, b1, b2, eps)

@@ -13,13 +13,15 @@ from repro.optim import quant8
 
 
 def galore_project(P: jnp.ndarray, G: jnp.ndarray) -> jnp.ndarray:
-    """R = Pᵀ G.  P (m, r), G (m, n) -> (r, n) f32."""
-    return jnp.einsum("mr,mn->rn", P.astype(jnp.float32), G.astype(jnp.float32))
+    """R = Pᵀ G.  P (..., m, r), G (..., m, n) -> (..., r, n) f32."""
+    return jnp.einsum("...mr,...mn->...rn", P.astype(jnp.float32), G.astype(jnp.float32))
 
 
 def galore_project_back(P: jnp.ndarray, N: jnp.ndarray, alpha: float) -> jnp.ndarray:
-    """G̃ = α · P N.  P (m, r), N (r, n) -> (m, n) f32."""
-    return alpha * jnp.einsum("mr,rn->mn", P.astype(jnp.float32), N.astype(jnp.float32))
+    """G̃ = α · P N.  P (..., m, r), N (..., r, n) -> (..., m, n) f32."""
+    return alpha * jnp.einsum(
+        "...mr,...rn->...mn", P.astype(jnp.float32), N.astype(jnp.float32)
+    )
 
 
 def lowrank_adam_update(R, M, V, count, b1=0.9, b2=0.999, eps=1e-8):
@@ -33,6 +35,17 @@ def lowrank_adam_update(R, M, V, count, b1=0.9, b2=0.999, eps=1e-8):
     c2 = 1 - b2 ** count.astype(jnp.float32)
     N_t = (M_t / c1) / (jnp.sqrt(V_t / c2) + eps)
     return N_t, M_t, V_t
+
+
+def galore_fused_adam_step(P, G, M, V, count, b1=0.9, b2=0.999, eps=1e-8, alpha=1.0):
+    """Oracle for the fused leaf update: R = PᵀG → Adam → G̃ = α P N̂.
+
+    P (..., m, r), G (..., m, n), M/V (..., r, n) f32.
+    Returns (G̃ f32, M_t, V_t) — the exact composition of galore_project,
+    lowrank_adam_update and galore_project_back."""
+    R = galore_project(P, G)
+    N_t, M_t, V_t = lowrank_adam_update(R, M, V, count, b1, b2, eps)
+    return galore_project_back(P, N_t, alpha), M_t, V_t
 
 
 def quantize_blocks(x_blocks: jnp.ndarray, book: jnp.ndarray):

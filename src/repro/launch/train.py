@@ -110,6 +110,8 @@ def main():
     ap.add_argument("--optimizer", default="adamw")
     ap.add_argument("--galore-rank", type=int, default=0)
     ap.add_argument("--galore-t", type=int, default=200)
+    ap.add_argument("--galore-fused", action="store_true",
+                    help="fused project→Adam→back kernel per leaf (adam/adamw)")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=256)
@@ -121,9 +123,12 @@ def main():
         if args.galore_rank > 0
         else None
     )
+    if args.galore_fused and galore is None:
+        ap.error("--galore-fused requires --galore-rank > 0")
     tc = TrainConfig(
         optimizer=args.optimizer, galore=galore, lr=args.lr, total_steps=args.steps,
         warmup_steps=max(1, args.steps // 10),
+        galore_fused_adam=args.galore_fused,
     )
     run = RunConfig(
         arch=args.arch, smoke=not args.full, steps=args.steps,

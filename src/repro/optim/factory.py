@@ -43,9 +43,16 @@ def galore_state_index(tc: TrainConfig) -> int:
 def build_optimizer(tc: TrainConfig, param_axes=None) -> GradientTransformation:
     stats = _stats_transform(tc)
     if tc.galore is not None:
+        if tc.galore_fused_adam and tc.optimizer not in ("adam", "adamw"):
+            raise ValueError(
+                f"galore_fused_adam requires a plain Adam inner optimizer, "
+                f"got {tc.optimizer!r}"
+            )
         stats = galore(stats, tc.galore, param_axes=param_axes,
                        external_refresh=tc.galore_external_refresh,
-                       pre_projected=tc.galore_dp_compress)
+                       pre_projected=tc.galore_dp_compress,
+                       fused_adam=tc.galore_fused_adam,
+                       b1=tc.b1, b2=tc.b2, eps=tc.eps)
     parts = []
     if tc.grad_clip > 0:
         parts.append(clip_by_global_norm(tc.grad_clip))

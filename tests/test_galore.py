@@ -148,6 +148,79 @@ def test_lemma33_stable_rank_decreases():
     assert sr_final < sr0 * 0.7, (sr0, sr_final)
 
 
+def test_fused_adam_path_matches_composable():
+    """fused_adam=True (kernel fast path) vs composable galore(scale_by_adam):
+    identical updates and state over a multi-step trajectory spanning a
+    refresh boundary, with left/right/stacked/passthrough leaves."""
+    key = jax.random.PRNGKey(7)
+    params = {
+        "wide": jax.random.normal(key, (48, 130)),                        # left
+        "tall": jax.random.normal(jax.random.fold_in(key, 1), (130, 48)),  # right
+        "stack": jax.random.normal(jax.random.fold_in(key, 2), (3, 40, 96)),
+        "bias": jax.random.normal(jax.random.fold_in(key, 3), (130,)),     # passthrough
+    }
+    cfg = GaLoreConfig(rank=16, update_freq=2, scale=0.25)
+    comp = galore(scale_by_adam(), cfg)
+    fused = galore(scale_by_adam(), cfg, fused_adam=True, b1=0.9, b2=0.999, eps=1e-8)
+    st_c = comp.init(params)
+    st_f = fused.init(params)
+    # state layouts are interchangeable (checkpoint compatibility)
+    assert jax.tree_util.tree_structure(st_c) == jax.tree_util.tree_structure(st_f)
+    for i in range(5):
+        g = jax.tree_util.tree_map(
+            lambda p: jax.random.normal(jax.random.fold_in(key, 100 + i), p.shape),
+            params,
+        )
+        u_c, st_c = comp.update(g, st_c, params)
+        u_f, st_f = fused.update(g, st_f, params)
+        for k in params:
+            np.testing.assert_allclose(
+                np.asarray(u_c[k]), np.asarray(u_f[k]),
+                rtol=1e-5, atol=1e-5, err_msg=f"step {i} leaf {k}",
+            )
+    for k in params:
+        np.testing.assert_allclose(
+            np.asarray(st_c["inner"]["m"][k]), np.asarray(st_f["inner"]["m"][k]),
+            rtol=1e-5, atol=1e-6, err_msg=f"moment m leaf {k}",
+        )
+
+
+def test_fused_adam_rejects_pre_projected():
+    with pytest.raises(ValueError):
+        galore(scale_by_adam(), GaLoreConfig(rank=8), fused_adam=True,
+               b1=0.9, b2=0.999, eps=1e-8, pre_projected=True)
+
+
+def test_fused_adam_requires_explicit_hparams():
+    """b1/b2/eps must be stated so they can't silently diverge from inner."""
+    with pytest.raises(ValueError):
+        galore(scale_by_adam(), GaLoreConfig(rank=8), fused_adam=True)
+
+
+def test_fused_adam_factory_selection():
+    from repro.optim.factory import build_optimizer
+
+    cfg = GaLoreConfig(rank=8, update_freq=4)
+    params = {"w": jnp.zeros((24, 64))}
+    g = {"w": jax.random.normal(jax.random.PRNGKey(8), (24, 64))}
+    tcs = [
+        TrainConfig(optimizer="adamw", galore=cfg, galore_fused_adam=f)
+        for f in (False, True)
+    ]
+    outs = []
+    for tc in tcs:
+        opt = build_optimizer(tc)
+        st = opt.init(params)
+        u, st = opt.update(g, st, params)
+        outs.append(u["w"])
+    np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(outs[1]),
+                               rtol=1e-5, atol=1e-6)
+    with pytest.raises(ValueError):
+        build_optimizer(
+            TrainConfig(optimizer="adafactor", galore=cfg, galore_fused_adam=True)
+        )
+
+
 def test_galore_trains_tiny_model_close_to_adam():
     """Quality parity on a tiny regression (paper Table 2 ordering, micro-scale)."""
     key = jax.random.PRNGKey(5)

@@ -46,6 +46,113 @@ def test_galore_project_back_kernel(m, r, n, dtype):
     np.testing.assert_allclose(got, want, rtol=tol, atol=tol * np.abs(want).max())
 
 
+BATCHED_SHAPES = [
+    (1, 64, 16, 48),    # degenerate batch
+    (3, 72, 16, 130),   # ragged n
+    (4, 256, 32, 512),  # aligned
+]
+
+
+@pytest.mark.parametrize("L,m,r,n", BATCHED_SHAPES)
+def test_galore_project_batched_grid(L, m, r, n):
+    """Stacked (L, m, n) leaves: one batched pallas_call == per-layer ref."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(10))
+    P = _rand(k1, (L, m, r), jnp.float32)
+    G = _rand(k2, (L, m, n), jnp.float32)
+    got = ops.galore_project(P, G, use_pallas=True, interpret=True)
+    want = ref.galore_project(P, G)
+    assert got.shape == (L, r, n)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5 * np.abs(want).max())
+
+
+@pytest.mark.parametrize("L,m,r,n", BATCHED_SHAPES)
+def test_galore_project_back_batched_grid(L, m, r, n):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(11))
+    P = _rand(k1, (L, m, r), jnp.float32)
+    N = _rand(k2, (L, r, n), jnp.float32)
+    got = ops.galore_project_back(P, N, 0.25, use_pallas=True, interpret=True)
+    want = ref.galore_project_back(P, N, 0.25)
+    assert got.shape == (L, m, n)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5 * np.abs(want).max())
+
+
+def test_galore_project_stacked_experts_4d():
+    """(L, E, m, n) flattens into one batch grid axis — single launch."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(12))
+    P = _rand(k1, (2, 3, 40, 8), jnp.float32)
+    G = _rand(k2, (2, 3, 40, 96), jnp.float32)
+    got = ops.galore_project(P, G, use_pallas=True, interpret=True)
+    np.testing.assert_allclose(got, ref.galore_project(P, G), rtol=1e-5, atol=1e-5)
+
+
+def _fused_inputs(key, shape, dtype=jnp.float32):
+    lead, (m, r, n) = shape[:-3], shape[-3:]
+    ks = jax.random.split(key, 4)
+    P = _rand(ks[0], lead + (m, r), dtype)
+    G = _rand(ks[1], lead + (m, n), dtype)
+    M = jax.random.normal(ks[2], lead + (r, n), jnp.float32) * 0.01
+    V = jnp.abs(jax.random.normal(ks[3], lead + (r, n), jnp.float32)) * 1e-4
+    return P, G, M, V
+
+
+@pytest.mark.parametrize("m,r,n", PROJECT_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_galore_fused_adam_kernel(m, r, n, dtype):
+    """Fused project→Adam→back vs the ref oracle, ragged shapes included."""
+    P, G, M, V = _fused_inputs(jax.random.PRNGKey(13), (m, r, n), dtype)
+    count = jnp.int32(7)
+    got = ops.galore_fused_adam_step(
+        P, G, M, V, count, alpha=0.25, use_pallas=True, interpret=True
+    )
+    want = ref.galore_fused_adam_step(
+        P.astype(jnp.float32), G.astype(jnp.float32), M, V, count, alpha=0.25
+    )
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    for name, a, b in zip(["update", "m", "v"], got, want):
+        np.testing.assert_allclose(
+            a, b, rtol=tol, atol=tol * max(np.abs(b).max(), 1e-3), err_msg=name
+        )
+
+
+@pytest.mark.parametrize("shape", [(1, 64, 16, 48), (3, 72, 16, 130), (2, 3, 40, 8, 96)])
+def test_galore_fused_adam_kernel_batched(shape):
+    """Stacked (L, m, n) / (L, E, m, n) leaves: one batched fused launch."""
+    P, G, M, V = _fused_inputs(jax.random.PRNGKey(14), shape)
+    count = jnp.int32(3)
+    got = ops.galore_fused_adam_step(
+        P, G, M, V, count, alpha=1.0, use_pallas=True, interpret=True
+    )
+    want = ref.galore_fused_adam_step(P, G, M, V, count)
+    assert got[0].shape == G.shape and got[1].shape == M.shape
+    for name, a, b in zip(["update", "m", "v"], got, want):
+        np.testing.assert_allclose(
+            a, b, rtol=1e-5, atol=1e-5 * max(np.abs(b).max(), 1e-3), err_msg=name
+        )
+
+
+def test_galore_fused_matches_unfused_kernel_sequence():
+    """Fused kernel vs the three-kernel sequence it replaces (both Pallas)."""
+    m, r, n = 72, 16, 130
+    P, G, M, V = _fused_inputs(jax.random.PRNGKey(15), (m, r, n))
+    count = jnp.int32(5)
+    got = ops.galore_fused_adam_step(
+        P, G, M, V, count, alpha=0.25, use_pallas=True, interpret=True
+    )
+    R = ops.galore_project(P, G, use_pallas=True, interpret=True)
+    N, M_t, V_t = ops.lowrank_adam_update(R, M, V, count)
+    upd = ops.galore_project_back(P, N, 0.25, use_pallas=True, interpret=True)
+    for name, a, b in zip(["update", "m", "v"], got, (upd, M_t, V_t)):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5, err_msg=name)
+
+
+def test_galore_fused_vmem_guard():
+    """Shapes whose resident P cannot fit VMEM raise (ops falls back)."""
+    from repro.kernels import galore_fused
+
+    with pytest.raises(ValueError):
+        galore_fused._pick_bn(m=65536, r=512, n=1024, g_itemsize=4, bn0=512)
+
+
 @pytest.mark.parametrize("nblocks", [1, 3, 16, 33])
 def test_adam8bit_kernel(nblocks):
     key = jax.random.PRNGKey(2)
