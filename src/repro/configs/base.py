@@ -124,6 +124,17 @@ class GaLoreConfig:
     projector: str = "svd"  # svd | randomized | newton_schulz
     power_iters: int = 2  # subspace/power iterations for randomized modes
     min_dim: int = 0  # only project matrices with min(m, n) > max(rank, min_dim)
+    # --- per-leaf subspace lifecycle policies (core/subspace.py) ---
+    # All defaults leave the lifecycle in the paper's global-(rank, T) mode;
+    # the SubspaceManager reproduces today's behavior bit-for-bit then.
+    rank_frac: float = 0.0  # >0: per-leaf rank = max(1, rank_frac * min(m, n))
+    rank_overrides: tuple = ()  # ((path_substring, rank), ...) — first match wins
+    refresh_stagger: bool = False  # deterministic per-leaf refresh offsets in [0, T)
+    adaptive_t: bool = False  # overlap-gated per-leaf period adaptation (Q-GaLore-style)
+    t_min: int = 0  # adaptive period floor; 0 -> max(1, update_freq // 4)
+    t_max: int = 0  # adaptive period ceiling; 0 -> 8 * update_freq
+    overlap_hi: float = 0.9  # stretch the leaf period when refresh overlap >= hi
+    overlap_lo: float = 0.5  # shrink it when overlap < lo
 
 
 @dataclasses.dataclass(frozen=True)

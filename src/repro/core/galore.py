@@ -14,74 +14,49 @@ at full shape, exactly as the paper treats them.
 Leaves may carry leading batch dims (stacked layers (L, m, n) or stacked
 experts (L, E, m, n)) — projection and refresh vmap over them.
 
+All per-leaf decisions — which leaves project, each leaf's rank, refresh
+period and stagger offset, the adaptive-T schedule — come from the
+SubspaceManager in core/subspace.py (the single source of truth; see its
+docstring for the policy knobs). Ranks may differ per leaf; every shape here
+is derived from the plan, so ragged ranks flow through projector init,
+compact moments, and the fused kernel dispatch without special cases.
+
 When the inner optimizer is plain Adam, `fused_adam=True` collapses steps
 2-4 into one Pallas kernel per leaf (kernels/galore_fused.py) with identical
 numerics and state layout; the composable path here is the oracle.
 
 State layout:
     {"step", "key", "proj": {path-matching subtree of P arrays}, "inner": ...}
+plus, only when the adaptive-T policy is on, "schedule": per-leaf
+{period, next, overlap} scalars (checkpointed with everything else).
 """
 from __future__ import annotations
-
-import dataclasses
-from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import GaLoreConfig
-from repro.core.projector import compute_projector
+from repro.core.subspace import (
+    DEFAULT_EXCLUDE,
+    LeafPlan,
+    SubspaceManager,
+    SubspacePlan,
+    _lead,
+    proj_shape,
+    r_shape,
+    rank_axis,
+)
 from repro.optim.transform import GradientTransformation
-from repro.utils import is_axes, logical_constraint, tree_map_with_path
-
-DEFAULT_EXCLUDE = ("embed", "dec_pos")
-
-
-def rank_axis(kept_label):
-    """Mesh-complementary logical axis for the GaLore rank dim (2-D states)."""
-    return "rank_model" if kept_label in (None, "embed") else "rank_data"
-
-
-@dataclasses.dataclass(frozen=True)
-class LeafPlan:
-    galore: bool
-    side: str = "left"  # "left": R = P^T G ; "right": R = G P
-    ax_m: str | None = None  # logical label of dim -2 (None if unknown)
-    ax_n: str | None = None  # logical label of dim -1
+from repro.utils import logical_constraint
 
 
 def plan_for_params(params, cfg: GaLoreConfig, exclude=DEFAULT_EXCLUDE, param_axes=None):
-    """Pytree of LeafPlan mirroring params; param_axes (optional) supplies the
-    logical labels used to keep the projector refresh 2-D sharded."""
-    ax_map = {}
-    if param_axes is not None:
-        from repro.utils import path_str
-        import jax as _jax
-
-        flat_ax, _ = _jax.tree_util.tree_flatten_with_path(param_axes, is_leaf=is_axes)
-        ax_map = {path_str(pth): a for pth, a in flat_ax}
-
-    def per_leaf(path, p):
-        if not hasattr(p, "ndim") or p.ndim < 2:
-            return LeafPlan(False)
-        if any(e in path for e in exclude):
-            return LeafPlan(False)
-        m, n = p.shape[-2], p.shape[-1]
-        if min(m, n) <= max(cfg.rank, cfg.min_dim):
-            return LeafPlan(False)
-        ax = ax_map.get(path)
-        ax_m = ax[-2] if ax else None
-        ax_n = ax[-1] if ax else None
-        return LeafPlan(True, "left" if m <= n else "right", ax_m, ax_n)
-
-    return tree_map_with_path(per_leaf, params)
+    """Pytree of SubspacePlan mirroring params (thin wrapper over the
+    SubspaceManager so legacy callers share the single source of truth)."""
+    return SubspaceManager(cfg, exclude, param_axes).plans(params)
 
 
-def _lead(x, *tail):
-    return (None,) * (x.ndim - len(tail)) + tail
-
-
-def _project(g, P, plan: LeafPlan):
+def _project(g, P, plan: SubspacePlan):
     if plan.side == "left":  # P (..., m, r): R = P^T G -> (..., r, n)
         R = jnp.einsum("...mr,...mn->...rn", P, g.astype(jnp.float32))
         return logical_constraint(R, *_lead(R, rank_axis(plan.ax_n), plan.ax_n))
@@ -89,26 +64,12 @@ def _project(g, P, plan: LeafPlan):
     return logical_constraint(R, *_lead(R, plan.ax_m, rank_axis(plan.ax_m)))
 
 
-def _project_back(R, P, plan: LeafPlan):
+def _project_back(R, P, plan: SubspacePlan):
     if plan.side == "left":
         G = jnp.einsum("...mr,...rn->...mn", P, R)
     else:
         G = jnp.einsum("...mr,...nr->...mn", R, P)
     return logical_constraint(G, *_lead(G, plan.ax_m, plan.ax_n))
-
-
-def _proj_shape(p, plan: LeafPlan, rank: int):
-    m, n = p.shape[-2], p.shape[-1]
-    if plan.side == "left":
-        return p.shape[:-2] + (m, rank)
-    return p.shape[:-2] + (n, rank)
-
-
-def _r_shape(p, plan: LeafPlan, rank: int):
-    m, n = p.shape[-2], p.shape[-1]
-    if plan.side == "left":
-        return p.shape[:-2] + (rank, n)
-    return p.shape[:-2] + (m, rank)
 
 
 def galore(
@@ -122,6 +83,7 @@ def galore(
     b1: float | None = None,
     b2: float | None = None,
     eps: float | None = None,
+    seed: int = 0,
 ) -> GradientTransformation:
     """external_refresh=True removes the in-step `lax.cond` SVD refresh —
     the launcher then calls `refresh_projectors` every T steps as a separate
@@ -138,67 +100,68 @@ def galore(
     fused_adam=True: the hot path. Requires `inner` to be plain Adam
     (scale_by_adam-shaped state {m, v, count}; b1/b2/eps must match). GaLore
     leaves bypass the composable project → inner.update → back-project
-    sequence and run `ops.galore_fused_adam_step` — one Pallas kernel per
-    leaf that keeps R/N̂ in VMEM and updates the compact moments in place;
-    non-galore leaves get the identical Adam math at full shape. State
-    layout is unchanged (checkpoints swap freely between the two paths),
-    and the composable path remains the numerics oracle. Right-side leaves
-    (m > n) run the kernel on transposed views. Incompatible with
-    pre_projected (fused path wants the full-shape gradient). b1/b2/eps are
-    required with fused_adam and MUST equal the inner Adam's hyperparameters
-    — the fused kernel computes the moment math itself, and a mismatch would
-    silently diverge from the composable oracle."""
+    sequence and run the fused Pallas kernel — one launch per leaf that keeps
+    R/N̂ in VMEM and updates the compact moments in place; non-galore leaves
+    get the identical Adam math at full shape. State layout is unchanged
+    (checkpoints swap freely between the two paths), and the composable path
+    remains the numerics oracle. Left- and right-side leaves each have a
+    dedicated kernel (kernels/galore_fused.py) — no transposes on either
+    side. Incompatible with pre_projected (fused path wants the full-shape
+    gradient). b1/b2/eps are required with fused_adam and MUST equal the
+    inner Adam's hyperparameters — the fused kernel computes the moment math
+    itself, and a mismatch would silently diverge from the composable oracle.
+
+    seed: PRNG seed for the projector sketch randomness (threaded from
+    TrainConfig.seed by optim/factory.py)."""
     if fused_adam and pre_projected:
         raise ValueError("fused_adam is incompatible with pre_projected gradients")
     if fused_adam and None in (b1, b2, eps):
         raise ValueError(
             "fused_adam=True requires explicit b1/b2/eps matching the inner Adam"
         )
+    mgr = SubspaceManager(cfg, exclude, param_axes)
+
     def init(params):
-        plans = plan_for_params(params, cfg, exclude, param_axes)
+        plans = mgr.plans(params)
 
         def proj_init(p, plan):
             if not plan.galore:
                 # scalar placeholder keeps the tree structure aligned with params
                 return jnp.zeros((), jnp.float32)
-            return jnp.zeros(_proj_shape(p, plan, cfg.rank), jnp.float32)
+            return jnp.zeros(proj_shape(p, plan), jnp.float32)
 
         def inner_struct(p, plan):
             if not plan.galore:
                 return p
-            return jnp.zeros(_r_shape(p, plan, cfg.rank), jnp.float32)
+            return jnp.zeros(r_shape(p, plan), jnp.float32)
 
         proj = jax.tree_util.tree_map(proj_init, params, plans)
         projected_params = jax.tree_util.tree_map(inner_struct, params, plans)
-        return {
+        state = {
             "step": jnp.zeros((), jnp.int32),
-            "key": jax.random.PRNGKey(0),
+            "key": jax.random.PRNGKey(seed),
             "proj": proj,
             "inner": inner.init(projected_params),
         }
+        sched = mgr.init_schedule(params, plans)
+        if sched is not None:
+            state["schedule"] = sched
+        return state
 
     def update(grads, state, params=None):
         plan_src = params if pre_projected else grads
-        plans = plan_for_params(plan_src, cfg, exclude, param_axes)
+        plans = mgr.plans(plan_src)
         step = state["step"]
+        sched = state.get("schedule")
 
         # --- 1) maybe refresh projectors from the current gradient ---
         if external_refresh or pre_projected:
             proj = state["proj"]
         else:
-            refresh = (step % cfg.update_freq) == 0
             key = jax.random.fold_in(state["key"], step)
-
-            def refresh_leaf(g, P_old, plan):
-                if not plan.galore:
-                    return P_old
-
-                def compute(_):
-                    return _compute_leaf_projector(g, plan, cfg, key)
-
-                return jax.lax.cond(refresh, compute, lambda _: P_old, operand=None)
-
-            proj = jax.tree_util.tree_map(refresh_leaf, grads, state["proj"], plans)
+            proj, sched = mgr.refresh_tree(
+                grads, state["proj"], sched, plans, key, step=step
+            )
 
         if fused_adam:
             # --- 2-4 fused) one kernel per galore leaf: project → Adam →
@@ -233,6 +196,8 @@ def galore(
             "proj": proj,
             "inner": inner_state,
         }
+        if sched is not None:
+            new_state["schedule"] = sched
         return updates, new_state
 
     return GradientTransformation(init, update)
@@ -242,9 +207,11 @@ def _fused_adam_update(grads, proj, inner_state, plans, cfg: GaLoreConfig,
                        b1: float, b2: float, eps: float):
     """Adam step bypassing the generic inner transform (the fused fast path).
 
-    Galore leaves run `ops.galore_fused_adam_step` (single HBM pass, moments
+    Galore leaves run the side-matched fused kernel (single HBM pass, moments
     updated in place); other leaves get the same Adam math at full shape.
-    Reads and writes the scale_by_adam state layout {m, v, count}."""
+    Reads and writes the scale_by_adam state layout {m, v, count}. Per-leaf
+    ranks are carried by the array shapes — each distinct (side, m, r, n)
+    gets its own kernel specialization, which is exactly what Pallas wants."""
     from repro.kernels import ops, ref
 
     count = inner_state["count"] + 1
@@ -255,16 +222,16 @@ def _fused_adam_update(grads, proj, inner_state, plans, cfg: GaLoreConfig,
             # source of truth (also what scale_by_adam computes)
             out, m_t, v_t = ref.lowrank_adam_update(g, m, v, count, b1, b2, eps)
             return out.astype(g.dtype), m_t, v_t
-        gk, mk, vk = g, m, v
         if plan.side == "right":
-            # kernel computes the left form; a right-side leaf is its exact
-            # transpose (R = GP ⇔ Rᵀ = PᵀGᵀ), so run on swapped views
-            gk, mk, vk = (jnp.swapaxes(x, -1, -2) for x in (g, m, v))
-        upd, m_t, v_t = ops.galore_fused_adam_step(
-            P, gk, mk, vk, count, b1=b1, b2=b2, eps=eps, alpha=cfg.scale
-        )
-        if plan.side == "right":
-            upd, m_t, v_t = (jnp.swapaxes(x, -1, -2) for x in (upd, m_t, v_t))
+            # dedicated transposed-blockspec kernel: R = G P, G̃ = α N̂ Pᵀ —
+            # no swapaxes round-trips on g/m/v
+            upd, m_t, v_t = ops.galore_fused_adam_step_right(
+                P, g, m, v, count, b1=b1, b2=b2, eps=eps, alpha=cfg.scale
+            )
+        else:
+            upd, m_t, v_t = ops.galore_fused_adam_step(
+                P, g, m, v, count, b1=b1, b2=b2, eps=eps, alpha=cfg.scale
+            )
         upd = logical_constraint(upd, *_lead(upd, plan.ax_m, plan.ax_n))
         return upd, m_t, v_t
 
@@ -285,36 +252,36 @@ def _fused_adam_update(grads, proj, inner_state, plans, cfg: GaLoreConfig,
     return updates, {"m": new_m, "v": new_v, "count": count}
 
 
-def _compute_leaf_projector(g, plan: LeafPlan, cfg: GaLoreConfig, key):
-    if plan.side == "left":
-        G_in, am, an = g, plan.ax_m, plan.ax_n
-    else:
-        G_in, am, an = jnp.swapaxes(g, -1, -2), plan.ax_n, plan.ax_m
-    G_in = logical_constraint(G_in, *_lead(G_in, am, an))
-    P_new = compute_projector(
-        G_in, cfg.rank, method=cfg.projector, key=key,
-        power_iters=cfg.power_iters, axes=(am, an),
-    )
-    return logical_constraint(P_new, *_lead(P_new, am, None))
-
-
 def refresh_projectors(grads, galore_state, cfg: GaLoreConfig,
-                       exclude=DEFAULT_EXCLUDE, param_axes=None):
-    """Recompute every projector from `grads` (the external-refresh step)."""
-    plans = plan_for_params(grads, cfg, exclude, param_axes)
+                       exclude=DEFAULT_EXCLUDE, param_axes=None, step=None):
+    """External projector refresh (the launcher-driven path).
+
+    step=None recomputes EVERY projector from `grads` — the legacy every-T
+    spike refresh. step=<int or traced int32> is the partial-refresh mode:
+    only the leaves due at `step` (per their plan offsets / adaptive periods)
+    recompute, so a staggered launcher can call this every step and amortize
+    the SVD work across the window. With a concrete Python-int step and the
+    static schedule the not-due leaves cost nothing at trace time."""
+    mgr = SubspaceManager(cfg, exclude, param_axes)
+    plans = mgr.plans(grads)
     key = jax.random.fold_in(galore_state["key"], galore_state["step"])
-
-    def leaf(g, P_old, plan):
-        if not plan.galore:
-            return P_old
-        return _compute_leaf_projector(g, plan, cfg, key)
-
-    proj = jax.tree_util.tree_map(leaf, grads, galore_state["proj"], plans)
-    return {**galore_state, "proj": proj}
+    sched = galore_state.get("schedule")
+    sched_step = galore_state["step"] if step is None else step
+    proj, sched = mgr.refresh_tree(
+        grads, galore_state["proj"], sched, plans, key,
+        step=sched_step, force_all=step is None,
+    )
+    out = {**galore_state, "proj": proj}
+    if sched is not None:
+        out["schedule"] = sched
+    return out
 
 
 def galore_state_bytes(params, cfg: GaLoreConfig, exclude=DEFAULT_EXCLUDE) -> dict:
-    """Analytic memory accounting (paper Table 1): projector + compact moments."""
+    """Analytic memory accounting (paper Table 1): projector + compact moments.
+
+    Uses each leaf's OWN rank from its SubspacePlan, so heterogeneous-rank
+    configs (rank_frac / rank_overrides) report their true reduced footprint."""
     plans = plan_for_params(params, cfg, exclude)
     proj_elems = 0
     moment_elems = 0
@@ -323,12 +290,12 @@ def galore_state_bytes(params, cfg: GaLoreConfig, exclude=DEFAULT_EXCLUDE) -> di
 
     for (path, p), (_, plan) in zip(
         jax.tree_util.tree_leaves_with_path(params),
-        jax.tree_util.tree_leaves_with_path(plans, is_leaf=lambda x: isinstance(x, LeafPlan)),
+        jax.tree_util.tree_leaves_with_path(plans, is_leaf=lambda x: isinstance(x, SubspacePlan)),
     ):
         size = int(np.prod(p.shape))
         if plan.galore:
-            proj_elems += int(np.prod(_proj_shape(p, plan, cfg.rank)))
-            moment_elems += int(np.prod(_r_shape(p, plan, cfg.rank)))
+            proj_elems += int(np.prod(proj_shape(p, plan)))
+            moment_elems += int(np.prod(r_shape(p, plan)))
         else:
             full_moment_elems += size
     return {

@@ -192,7 +192,13 @@ def compute_projector(
 
 
 def subspace_overlap(P: jnp.ndarray, P_ref: jnp.ndarray) -> jnp.ndarray:
-    """Mean squared principal cosine between two column subspaces (1.0 = same)."""
-    M = P_ref.T @ P  # (r_ref, r)
+    """Mean squared principal cosine between two column subspaces (1.0 = same).
+
+    Accepts stacked projectors (..., m, r): the overlap is computed per batch
+    element on the tiny (r_ref, r) cross-Gram — this is the refresh-time
+    signal the adaptive-T policy in core/subspace.py monitors, so it must be
+    cheap even for stacked expert leaves."""
+    M = jnp.einsum("...mr,...ms->...rs",
+                   P_ref.astype(jnp.float32), P.astype(jnp.float32))
     s = jnp.linalg.svd(M, compute_uv=False)
-    return jnp.mean(jnp.square(s))
+    return jnp.mean(jnp.square(s), axis=-1)

@@ -1,0 +1,295 @@
+"""Subspace lifecycle manager: the single source of truth for per-leaf GaLore.
+
+GaLore's defining moving part is the per-layer subspace P_t refreshed every T
+steps (paper Algorithm 2). Historically that lifecycle was a pair of global
+scalars on GaLoreConfig plus plan logic re-derived in four places. This module
+owns all of it:
+
+  * SubspacePlan — per-leaf decision record: whether the leaf projects, which
+    side, the logical axis labels, AND the leaf's `rank`, `refresh_period`,
+    `refresh_offset`. Ranks may vary per leaf (path-pattern overrides,
+    proportional `rank_frac`); every consumer (projector init, compact-moment
+    shapes, fused-kernel dispatch, sharding-axis derivation, the GaLore-DP
+    compressed all-reduce, memory accounting) reads the rank from the plan,
+    never from GaLoreConfig directly.
+  * SubspaceManager — computes the plan tree from GaLoreConfig + param axes,
+    owns the refresh schedule (staggered offsets so SVD work amortizes across
+    the window instead of spiking every T-th step) and the adaptive-T policy
+    (AdaRankGrad / Q-GaLore-style: monitor subspace_overlap(P_new, P_old) at
+    refresh time and stretch/shrink each leaf's period).
+  * refresh_tree — one refresh implementation shared by the inline `lax.cond`
+    path in core/galore.py and the external-refresh launcher path
+    (refresh_projectors / make_refresh_step), including a step-aware partial
+    mode that refreshes only the leaves due at `step`.
+
+The adaptive policy's per-leaf state ({period, next, overlap} scalars) lives
+inside the galore optimizer state under the "schedule" key, so it checkpoints
+and restores with everything else. When `adaptive_t` is off the key is absent
+and the state layout is byte-identical to the fixed-(rank, T) original; with
+every policy at its default the manager reproduces the historical behavior
+bit-for-bit (same plan gates, same refresh predicate, same projector math).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GaLoreConfig
+from repro.core.projector import compute_projector, subspace_overlap
+from repro.utils import logical_constraint, path_str
+
+DEFAULT_EXCLUDE = ("embed", "dec_pos")
+
+
+def rank_axis(kept_label):
+    """Mesh-complementary logical axis for the GaLore rank dim (2-D states)."""
+    return "rank_model" if kept_label in (None, "embed") else "rank_data"
+
+
+@dataclasses.dataclass(frozen=True)
+class SubspacePlan:
+    """Per-leaf subspace decision. Extends the old LeafPlan with the leaf's
+    own rank and refresh schedule — static (trace-time) values; the adaptive
+    policy's *runtime* period lives in the schedule state, not here."""
+
+    galore: bool
+    side: str = "left"  # "left": R = P^T G ; "right": R = G P
+    ax_m: str | None = None  # logical label of dim -2 (None if unknown)
+    ax_n: str | None = None  # logical label of dim -1
+    rank: int = 0  # this leaf's projection rank (0 for non-galore leaves)
+    refresh_period: int = 0  # base T for this leaf
+    refresh_offset: int = 0  # deterministic stagger phase in [0, refresh_period)
+
+
+# Backwards-compatible name: consumers that only read galore/side/ax_* keep
+# working; isinstance(x, LeafPlan) checks also keep working.
+LeafPlan = SubspacePlan
+
+
+def proj_shape(p, plan: SubspacePlan) -> tuple:
+    """Shape of the leaf's projector P (kept dim × plan.rank)."""
+    m, n = p.shape[-2], p.shape[-1]
+    if plan.side == "left":
+        return p.shape[:-2] + (m, plan.rank)
+    return p.shape[:-2] + (n, plan.rank)
+
+
+def r_shape(p, plan: SubspacePlan) -> tuple:
+    """Shape of the leaf's compact (projected) gradient / moments."""
+    m, n = p.shape[-2], p.shape[-1]
+    if plan.side == "left":
+        return p.shape[:-2] + (plan.rank, n)
+    return p.shape[:-2] + (m, plan.rank)
+
+
+def _lead(x, *tail):
+    return (None,) * (x.ndim - len(tail)) + tail
+
+
+def subspace_overlap_mean(P: jnp.ndarray, P_ref: jnp.ndarray) -> jnp.ndarray:
+    """Scalar mean squared principal cosine between two (possibly stacked)
+    projector trees' column subspaces — batched over leading dims."""
+    return jnp.mean(subspace_overlap(P, P_ref))
+
+
+def compute_leaf_projector(g, plan: SubspacePlan, cfg: GaLoreConfig, key):
+    """Top-rank subspace of one leaf's gradient, using the plan's rank and
+    the sharding-aware projector backend from core/projector.py."""
+    if plan.side == "left":
+        G_in, am, an = g, plan.ax_m, plan.ax_n
+    else:
+        G_in, am, an = jnp.swapaxes(g, -1, -2), plan.ax_n, plan.ax_m
+    G_in = logical_constraint(G_in, *_lead(G_in, am, an))
+    P_new = compute_projector(
+        G_in, plan.rank, method=cfg.projector, key=key,
+        power_iters=cfg.power_iters, axes=(am, an),
+    )
+    return logical_constraint(P_new, *_lead(P_new, am, None))
+
+
+class SubspaceManager:
+    """Computes per-leaf SubspacePlans and drives the refresh lifecycle."""
+
+    def __init__(self, cfg: GaLoreConfig, exclude=DEFAULT_EXCLUDE, param_axes=None):
+        self.cfg = cfg
+        self.exclude = exclude
+        self.param_axes = param_axes
+
+    # -- policy ------------------------------------------------------------
+
+    @property
+    def adaptive(self) -> bool:
+        return bool(self.cfg.adaptive_t)
+
+    def t_bounds(self) -> tuple[int, int]:
+        T = self.cfg.update_freq
+        t_min = self.cfg.t_min or max(1, T // 4)
+        t_max = self.cfg.t_max or 8 * T
+        return t_min, t_max
+
+    def leaf_rank(self, path: str, m: int, n: int) -> int:
+        for pattern, r in self.cfg.rank_overrides:
+            if pattern in path:
+                return int(r)
+        if self.cfg.rank_frac > 0:
+            return max(1, int(self.cfg.rank_frac * min(m, n)))
+        return self.cfg.rank
+
+    # -- plans -------------------------------------------------------------
+
+    def plans(self, params) -> Any:
+        """Pytree of SubspacePlan mirroring params. Stagger offsets are
+        deterministic functions of the galore-leaf enumeration order (tree
+        flatten order), so init / update / external refresh always agree."""
+        ax_map = {}
+        if self.param_axes is not None:
+            from repro.utils import is_axes
+
+            flat_ax, _ = jax.tree_util.tree_flatten_with_path(
+                self.param_axes, is_leaf=is_axes
+            )
+            ax_map = {path_str(pth): a for pth, a in flat_ax}
+
+        cfg = self.cfg
+        flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+        raw: list[SubspacePlan] = []
+        for pth, p in flat:
+            path = path_str(pth)
+            if not hasattr(p, "ndim") or p.ndim < 2 or any(e in path for e in self.exclude):
+                raw.append(SubspacePlan(False))
+                continue
+            m, n = p.shape[-2], p.shape[-1]
+            rank = self.leaf_rank(path, m, n)
+            if min(m, n) <= max(rank, cfg.min_dim):
+                raw.append(SubspacePlan(False))
+                continue
+            ax = ax_map.get(path)
+            raw.append(SubspacePlan(
+                True, "left" if m <= n else "right",
+                ax[-2] if ax else None, ax[-1] if ax else None,
+                rank=rank, refresh_period=cfg.update_freq,
+            ))
+
+        n_galore = sum(1 for pl in raw if pl.galore)
+        if cfg.refresh_stagger and n_galore > 0:
+            idx = 0
+            for i, pl in enumerate(raw):
+                if pl.galore:
+                    offset = (idx * cfg.update_freq) // n_galore
+                    raw[i] = dataclasses.replace(pl, refresh_offset=offset)
+                    idx += 1
+        return jax.tree_util.tree_unflatten(treedef, raw)
+
+    # -- schedule state ----------------------------------------------------
+
+    def init_schedule(self, params, plans) -> Optional[dict]:
+        """Adaptive-T per-leaf state: {period, next, overlap} scalar trees
+        mirroring params (zeros placeholders on non-galore leaves). Lives in
+        the galore optimizer state so it checkpoints; None when the policy
+        is off, keeping the default state layout unchanged."""
+        if not self.adaptive:
+            return None
+
+        def per(p, plan):
+            return jnp.asarray(plan.refresh_period if plan.galore else 0, jnp.int32)
+
+        def nxt(p, plan):
+            return jnp.zeros((), jnp.int32)  # every leaf refreshes at step 0
+
+        def ov(p, plan):
+            return jnp.zeros((), jnp.float32)
+
+        t = jax.tree_util.tree_map
+        return {
+            "period": t(per, params, plans),
+            "next": t(nxt, params, plans),
+            "overlap": t(ov, params, plans),
+        }
+
+    # -- refresh -----------------------------------------------------------
+
+    def refresh_tree(self, grads, proj, sched, plans, key, *, step,
+                     force_all: bool = False):
+        """One refresh pass over every leaf; returns (proj', sched').
+
+        force_all=True recomputes every galore projector unconditionally (the
+        legacy external-refresh semantics). Otherwise a leaf refreshes iff it
+        is due at `step`: with the static schedule and a concrete Python-int
+        step the not-due leaves are skipped at trace time (no conds at all —
+        the partial-refresh launcher path); with a traced step or the
+        adaptive policy each leaf gets a `lax.cond`.
+        """
+        cfg = self.cfg
+        adaptive = sched is not None
+        t_min, t_max = self.t_bounds()
+
+        zero_i = lambda p: jnp.zeros((), jnp.int32)
+        zero_f = lambda p: jnp.zeros((), jnp.float32)
+        per_tree = sched["period"] if adaptive else jax.tree_util.tree_map(zero_i, grads)
+        nxt_tree = sched["next"] if adaptive else jax.tree_util.tree_map(zero_i, grads)
+        ov_tree = sched["overlap"] if adaptive else jax.tree_util.tree_map(zero_f, grads)
+
+        def compute_new(g, P_old, plan, per, nxt, ov_old):
+            P_new = compute_leaf_projector(g, plan, cfg, key)
+            if not adaptive:
+                return P_new, per, nxt, ov_old
+            ov = subspace_overlap_mean(P_new, P_old)
+            # no adaptation signal on the very first refresh (P_old is zeros)
+            has_old = jnp.sum(jnp.abs(P_old)) > 0
+            per2 = jnp.where(ov >= cfg.overlap_hi, per * 2,
+                             jnp.where(ov < cfg.overlap_lo, per // 2, per))
+            per2 = jnp.where(has_old, jnp.clip(per2, t_min, t_max), per)
+            # the step-0 refresh establishes the stagger phase; afterwards the
+            # leaf free-runs at its own (possibly adapted) period
+            first = (jnp.asarray(step) == 0) & (plan.refresh_offset > 0)
+            nxt2 = jnp.where(first, plan.refresh_offset,
+                             jnp.asarray(step) + per2).astype(jnp.int32)
+            return P_new, per2.astype(jnp.int32), nxt2, jnp.where(has_old, ov, 0.0)
+
+        def due_of(plan, nxt):
+            if force_all:
+                return True
+            if adaptive:
+                return jnp.asarray(step) >= nxt
+            T = plan.refresh_period
+            return ((step % T) == (plan.refresh_offset % T)) | (step == 0)
+
+        def leaf(g, P_old, plan, per, nxt, ov_old):
+            if not plan.galore:
+                return P_old, per, nxt, ov_old
+            due = due_of(plan, nxt)
+            if isinstance(due, bool):  # static decision (Python-int step)
+                if not due:
+                    return P_old, per, nxt, ov_old
+                return compute_new(g, P_old, plan, per, nxt, ov_old)
+            return jax.lax.cond(
+                due,
+                lambda _: compute_new(g, P_old, plan, per, nxt, ov_old),
+                lambda _: (P_old, per, nxt, ov_old),
+                operand=None,
+            )
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat = [
+            leaf(g, P, plan, per, nxt, ov)
+            for g, P, plan, per, nxt, ov in zip(
+                flat_g,
+                treedef.flatten_up_to(proj),
+                treedef.flatten_up_to(plans),
+                treedef.flatten_up_to(per_tree),
+                treedef.flatten_up_to(nxt_tree),
+                treedef.flatten_up_to(ov_tree),
+            )
+        ]
+        proj_out = treedef.unflatten([t[0] for t in flat])
+        if not adaptive:
+            return proj_out, None
+        sched_out = {
+            "period": treedef.unflatten([t[1] for t in flat]),
+            "next": treedef.unflatten([t[2] for t in flat]),
+            "overlap": treedef.unflatten([t[3] for t in flat]),
+        }
+        return proj_out, sched_out

@@ -95,14 +95,22 @@ def _galore_proj_axes(p_axes, p_struct, gcfg: GaLoreConfig):
 
 def _projected_struct(p_struct, gcfg: GaLoreConfig):
     plans = plan_for_params(p_struct, gcfg)
-    from repro.core.galore import _r_shape
+    from repro.core.subspace import r_shape
 
     def per_leaf(p, plan):
         if not plan.galore:
             return p
-        return jax.ShapeDtypeStruct(_r_shape(p, plan, gcfg.rank), jnp.float32)
+        # plan.rank, not gcfg.rank: ragged per-leaf ranks flow into the
+        # compact-moment shapes the inner axes tree must mirror
+        return jax.ShapeDtypeStruct(r_shape(p, plan), jnp.float32)
 
     return jax.tree_util.tree_map(per_leaf, p_struct, plans)
+
+
+def _galore_schedule_axes(p_axes):
+    """Adaptive-T per-leaf schedule state: scalar {period, next, overlap}."""
+    scalars = jax.tree_util.tree_map(lambda ax: SCALAR, p_axes, is_leaf=is_axes)
+    return {"period": scalars, "next": scalars, "overlap": scalars}
 
 
 def _stats_axes(tc: TrainConfig, p_axes, p_struct):
@@ -128,6 +136,8 @@ def optimizer_state_axes(tc: TrainConfig, p_axes, p_struct):
             "proj": _galore_proj_axes(p_axes, p_struct, tc.galore),
             "inner": inner_axes,
         }
+        if tc.galore.adaptive_t:
+            stats_axes["schedule"] = _galore_schedule_axes(p_axes)
     else:
         stats_axes = _stats_axes(tc, p_axes, p_struct)
 

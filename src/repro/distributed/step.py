@@ -135,15 +135,22 @@ def make_refresh_step(cfg: ModelConfig, tc: TrainConfig, rules: Optional[Shardin
     """Standalone GaLore projector refresh (run every T steps by the launcher).
 
     Recomputes the gradient on (one microbatch of) the step's batch and
-    refreshes every projector — outside the train step so the SVD/subspace
-    math is never inside a GSPMD conditional (see core/galore.py)."""
+    refreshes projectors — outside the train step so the SVD/subspace math is
+    never inside a GSPMD conditional (see core/galore.py).
+
+    `refresh_step(params, opt_state, batch, step=None)`: step=None refreshes
+    every projector (the legacy every-T spike). Passing `step` enables the
+    SubspaceManager's partial mode — only the leaves due at that step (per
+    their stagger offsets / adaptive periods) recompute, amortizing the SVD
+    work across the window; with a concrete Python-int step the not-due
+    leaves are skipped at trace time (no conds in the lowered program)."""
     from repro.core.galore import refresh_projectors
     from repro.optim.factory import galore_state_index
 
     assert tc.galore is not None
     idx = galore_state_index(tc)
 
-    def refresh_step(params, opt_state, batch):
+    def refresh_step(params, opt_state, batch, step=None):
         with sharding_context(rules):
             if tc.microbatch and tc.microbatch > 1:
                 nm = tc.microbatch
@@ -154,7 +161,8 @@ def make_refresh_step(cfg: ModelConfig, tc: TrainConfig, rules: Optional[Shardin
                 lambda p: M.loss_fn(cfg, p, batch, z_loss=tc.z_loss)[0]
             )(params)
             new_galore = refresh_projectors(
-                grads, opt_state[idx], tc.galore, param_axes=M.param_axes(cfg)
+                grads, opt_state[idx], tc.galore, param_axes=M.param_axes(cfg),
+                step=step,
             )
             opt_state = opt_state[:idx] + (new_galore,) + opt_state[idx + 1:]
         return opt_state

@@ -189,3 +189,98 @@ def galore_fused_adam_step(
         m_new.reshape(*lead, r, n),
         v_new.reshape(*lead, r, n),
     )
+
+
+def _fused_right_kernel(
+    p_ref, g_ref, m_ref, v_ref, count_ref,
+    out_ref, m_out_ref, v_out_ref,
+    *, b1: float, b2: float, eps: float, alpha: float,
+):
+    # transposed-blockspec variant: the short (projected) side is n, the grid
+    # sweeps ROW tiles of the long m axis. Padding safety mirrors the left
+    # kernel: n and r are spanned whole, the swept m axis only ever produces
+    # garbage in out-of-bounds output rows, which Pallas discards.
+    p = p_ref[0].astype(jnp.float32)   # (n, r)
+    g = g_ref[0].astype(jnp.float32)   # (bm, n)
+
+    # R = G P on the MXU, f32 accumulate
+    R = jax.lax.dot_general(
+        g, p, dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (bm, r)
+
+    m_new = b1 * m_ref[0] + (1.0 - b1) * R
+    v_new = b2 * v_ref[0] + (1.0 - b2) * R * R
+    count = count_ref[0].astype(jnp.float32)
+    c1 = 1.0 - b1 ** count
+    c2 = 1.0 - b2 ** count
+    n_hat = (m_new / c1) / (jnp.sqrt(v_new / c2) + eps)
+
+    # G̃ = α N̂ Pᵀ (MXU)
+    out_ref[0] = alpha * jax.lax.dot_general(
+        n_hat, p, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_out_ref[0] = m_new
+    v_out_ref[0] = v_new
+
+
+def galore_fused_adam_step_right(
+    P, G, M, V, count,
+    *, b1=0.9, b2=0.999, eps=1e-8, alpha=1.0,
+    bm=DEFAULT_BN, interpret: bool = False,
+):
+    """Fused right-side GaLore-Adam step (dedicated kernel — no swapaxes).
+
+    P (..., n, r), G (..., m, n), M/V (..., m, r) f32, count scalar int32.
+    Computes R = G P → Adam → G̃ = α N̂ Pᵀ with P resident in VMEM across a
+    sweep over row tiles of the long m axis; exactly the transpose of the
+    left kernel's math with the blockspecs transposed to match, so right-side
+    leaves (m > n) stop round-tripping g/m/v through swapaxes copies in HBM.
+    VMEM budget is the left kernel's with the roles of m and n exchanged
+    (`_pick_bn(n, r, m, ...)`). M/V are updated in place via
+    input_output_aliases — treat the inputs as donated.
+    """
+    m, n = G.shape[-2:]
+    r = P.shape[-1]
+    assert P.shape[-2] == n, (P.shape, G.shape)
+    assert M.shape[-2:] == (m, r) and V.shape[-2:] == (m, r), (M.shape, V.shape)
+    assert M.dtype == jnp.float32 and V.dtype == jnp.float32, (M.dtype, V.dtype)
+    Pb, lead = _batch(P)
+    Gb, lead_g = _batch(G)
+    Mb, lead_m = _batch(M)
+    Vb, lead_v = _batch(V)
+    assert lead == lead_g == lead_m == lead_v, (P.shape, G.shape, M.shape, V.shape)
+    L = Gb.shape[0]
+
+    bm = _pick_bn(n, r, m, Gb.dtype.itemsize, bm)
+    grid = (L, pl.cdiv(m, bm))
+    out_shapes = (
+        jax.ShapeDtypeStruct((L, m, n), jnp.float32),
+        jax.ShapeDtypeStruct((L, m, r), jnp.float32),
+        jax.ShapeDtypeStruct((L, m, r), jnp.float32),
+    )
+    out, m_new, v_new = pl.pallas_call(
+        functools.partial(_fused_right_kernel, b1=b1, b2=b2, eps=eps, alpha=alpha),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, n, r), lambda l, i: (l, 0, 0)),   # P: resident per l
+            pl.BlockSpec((1, bm, n), lambda l, i: (l, i, 0)),  # G row tile
+            pl.BlockSpec((1, bm, r), lambda l, i: (l, i, 0)),  # M
+            pl.BlockSpec((1, bm, r), lambda l, i: (l, i, 0)),  # V
+            pl.BlockSpec((1,), lambda l, i: (0,)),             # count
+        ],
+        out_specs=(
+            pl.BlockSpec((1, bm, n), lambda l, i: (l, i, 0)),
+            pl.BlockSpec((1, bm, r), lambda l, i: (l, i, 0)),
+            pl.BlockSpec((1, bm, r), lambda l, i: (l, i, 0)),
+        ),
+        out_shape=out_shapes,
+        input_output_aliases={2: 1, 3: 2},  # M→M', V→V' updated in place
+        interpret=interpret,
+    )(Pb, Gb, Mb, Vb, count.reshape(1))
+    return (
+        out.reshape(*lead, m, n),
+        m_new.reshape(*lead, m, r),
+        v_new.reshape(*lead, m, r),
+    )

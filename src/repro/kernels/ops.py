@@ -64,6 +64,30 @@ def galore_fused_adam_step(P, G, M, V, count, *, b1=0.9, b2=0.999, eps=1e-8,
     return ref.galore_fused_adam_step(P, G, M, V, count, b1, b2, eps, alpha)
 
 
+def galore_fused_adam_step_right(P, G, M, V, count, *, b1=0.9, b2=0.999,
+                                 eps=1e-8, alpha=1.0, use_pallas=None,
+                                 interpret=False):
+    """Right-side fused leaf update: R = G P → Adam(M, V) → G̃ = α N̂ Pᵀ,
+    for leaves whose SHORT side is the last dim (m > n; P is (..., n, r),
+    M/V are (..., m, r)). A dedicated transposed-blockspec kernel — callers
+    no longer swapaxes g/m/v to reuse the left kernel. Returns (G̃, M', V')."""
+    if _resolve(use_pallas):
+        m, n = G.shape[-2:]
+        if galore_fused_k.fits_vmem(n, P.shape[-1], m, G.dtype.itemsize):
+            return galore_fused_k.galore_fused_adam_step_right(
+                P, G, M, V, count, b1=b1, b2=b2, eps=eps, alpha=alpha,
+                interpret=interpret,
+            )
+        # P too large for VMEM residency — compose the tiled kernels on
+        # transposed views (the pre-dedicated-kernel fallback)
+        sw = lambda x: jnp.swapaxes(x, -1, -2)
+        R = galore_k.galore_project(P, sw(G), interpret=interpret)
+        N, M_t, V_t = ref.lowrank_adam_update(R, sw(M), sw(V), count, b1, b2, eps)
+        upd = galore_k.galore_project_back(P, N, alpha, interpret=interpret)
+        return sw(upd), sw(M_t), sw(V_t)
+    return ref.galore_fused_adam_step_right(P, G, M, V, count, b1, b2, eps, alpha)
+
+
 def adam8bit_step(g_blocks, m_codes, m_scale, v_codes, v_scale, count,
                   *, b1=0.9, b2=0.999, eps=1e-8, use_pallas=None, interpret=False):
     """Fused dequant→Adam→requant on (nb, 256) blocks."""

@@ -48,6 +48,30 @@ def galore_fused_adam_step(P, G, M, V, count, b1=0.9, b2=0.999, eps=1e-8, alpha=
     return galore_project_back(P, N_t, alpha), M_t, V_t
 
 
+def galore_project_right(P: jnp.ndarray, G: jnp.ndarray) -> jnp.ndarray:
+    """R = G P.  P (..., n, r), G (..., m, n) -> (..., m, r) f32."""
+    return jnp.einsum("...mn,...nr->...mr", G.astype(jnp.float32), P.astype(jnp.float32))
+
+
+def galore_project_back_right(P: jnp.ndarray, N: jnp.ndarray, alpha: float) -> jnp.ndarray:
+    """G̃ = α · N Pᵀ.  P (..., n, r), N (..., m, r) -> (..., m, n) f32."""
+    return alpha * jnp.einsum(
+        "...mr,...nr->...mn", N.astype(jnp.float32), P.astype(jnp.float32)
+    )
+
+
+def galore_fused_adam_step_right(P, G, M, V, count, b1=0.9, b2=0.999, eps=1e-8,
+                                 alpha=1.0):
+    """Right-side oracle: R = G P → Adam → G̃ = α N̂ Pᵀ.
+
+    P (..., n, r), G (..., m, n), M/V (..., m, r) f32. Exactly the transpose
+    of the left-side composition — the dedicated right-side kernel must match
+    this without materializing any swapped views."""
+    R = galore_project_right(P, G)
+    N_t, M_t, V_t = lowrank_adam_update(R, M, V, count, b1, b2, eps)
+    return galore_project_back_right(P, N_t, alpha), M_t, V_t
+
+
 def quantize_blocks(x_blocks: jnp.ndarray, book: jnp.ndarray):
     """x (nb, BLOCK) f32 -> (codes u8, absmax f32 (nb,)). book sorted (256,)."""
     absmax = jnp.max(jnp.abs(x_blocks), axis=1) + 1e-12

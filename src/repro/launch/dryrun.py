@@ -60,10 +60,17 @@ def default_microbatch(cfg) -> int:
 
 
 def default_train_config(cfg, optimizer: str = "adamw", galore: bool = True,
-                         microbatch: int | None = None) -> TrainConfig:
-    """Paper-faithful defaults: GaLore rank ≈ d_model/4 (Table 2), T=200, α=0.25."""
+                         microbatch: int | None = None, rank_frac: float = 0.0,
+                         adaptive_t: bool = False, stagger: bool = False) -> TrainConfig:
+    """Paper-faithful defaults: GaLore rank ≈ d_model/4 (Table 2), T=200, α=0.25.
+
+    rank_frac / adaptive_t / stagger opt into the subspace-lifecycle policies
+    (core/subspace.py) so their sharded state + refresh lowering can be
+    dry-run audited per arch like everything else."""
     rank = max(128, (cfg.d_model // 4) // 128 * 128)
-    g = GaLoreConfig(rank=rank, update_freq=200, scale=0.25, projector="newton_schulz") if galore else None
+    g = GaLoreConfig(rank=rank, update_freq=200, scale=0.25, projector="newton_schulz",
+                     rank_frac=rank_frac, adaptive_t=adaptive_t,
+                     refresh_stagger=stagger) if galore else None
     mb = default_microbatch(cfg) if microbatch is None else microbatch
     return TrainConfig(optimizer=optimizer, galore=g, grad_clip=1.0, weight_decay=0.0,
                        microbatch=mb, galore_external_refresh=True)
@@ -115,6 +122,9 @@ def run_cell(
     optimizer: str = "adamw",
     galore: bool = True,
     skip_scaling: bool = False,
+    rank_frac: float = 0.0,
+    adaptive_t: bool = False,
+    stagger: bool = False,
 ) -> dict:
     cfg = get_config(arch)
     ok, reason = cfg.supports_shape(shape_name)
@@ -133,7 +143,8 @@ def run_cell(
     n_devices = mesh.size
     long_ctx = shape_name == "long_500k"
     rules = rules_variant(mesh, rules_name, long_context=long_ctx)
-    tc = default_train_config(cfg, optimizer, galore)
+    tc = default_train_config(cfg, optimizer, galore, rank_frac=rank_frac,
+                              adaptive_t=adaptive_t, stagger=stagger)
 
     t0 = time.time()
     compiled = lower_cell(cfg, shape_name, mesh, rules, tc)
@@ -250,6 +261,12 @@ def main():
     ap.add_argument("--rules", default="baseline")
     ap.add_argument("--optimizer", default="adamw")
     ap.add_argument("--no-galore", action="store_true")
+    ap.add_argument("--rank-frac", type=float, default=0.0,
+                    help="proportional per-leaf GaLore rank (core/subspace.py)")
+    ap.add_argument("--adaptive-t", action="store_true",
+                    help="adaptive per-leaf refresh period (adds schedule state)")
+    ap.add_argument("--stagger", action="store_true",
+                    help="staggered per-leaf projector refresh offsets")
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--skip-scaling", action="store_true")
     args = ap.parse_args()
@@ -277,6 +294,8 @@ def main():
                         arch, shape, multi_pod=multi, rules_name=args.rules,
                         optimizer=args.optimizer, galore=not args.no_galore,
                         skip_scaling=args.skip_scaling or multi,
+                        rank_frac=args.rank_frac, adaptive_t=args.adaptive_t,
+                        stagger=args.stagger,
                     )
                 except Exception as e:  # noqa: BLE001 — record the failure, keep going
                     rec = {

@@ -112,6 +112,13 @@ def main():
     ap.add_argument("--galore-t", type=int, default=200)
     ap.add_argument("--galore-fused", action="store_true",
                     help="fused project→Adam→back kernel per leaf (adam/adamw)")
+    ap.add_argument("--galore-rank-frac", type=float, default=0.0,
+                    help="proportional per-leaf rank: max(1, frac·min(m,n)); "
+                         "overrides --galore-rank per leaf")
+    ap.add_argument("--galore-adaptive-t", action="store_true",
+                    help="overlap-gated per-leaf refresh period (Q-GaLore-style)")
+    ap.add_argument("--galore-stagger", action="store_true",
+                    help="stagger per-leaf projector refreshes across the window")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=256)
@@ -119,12 +126,15 @@ def main():
     args = ap.parse_args()
 
     galore = (
-        GaLoreConfig(rank=args.galore_rank, update_freq=args.galore_t)
-        if args.galore_rank > 0
+        GaLoreConfig(rank=args.galore_rank, update_freq=args.galore_t,
+                     rank_frac=args.galore_rank_frac,
+                     adaptive_t=args.galore_adaptive_t,
+                     refresh_stagger=args.galore_stagger)
+        if args.galore_rank > 0 or args.galore_rank_frac > 0
         else None
     )
     if args.galore_fused and galore is None:
-        ap.error("--galore-fused requires --galore-rank > 0")
+        ap.error("--galore-fused requires --galore-rank or --galore-rank-frac > 0")
     tc = TrainConfig(
         optimizer=args.optimizer, galore=galore, lr=args.lr, total_steps=args.steps,
         warmup_steps=max(1, args.steps // 10),

@@ -52,7 +52,8 @@ def build_optimizer(tc: TrainConfig, param_axes=None) -> GradientTransformation:
                        external_refresh=tc.galore_external_refresh,
                        pre_projected=tc.galore_dp_compress,
                        fused_adam=tc.galore_fused_adam,
-                       b1=tc.b1, b2=tc.b2, eps=tc.eps)
+                       b1=tc.b1, b2=tc.b2, eps=tc.eps,
+                       seed=tc.seed)
     parts = []
     if tc.grad_clip > 0:
         parts.append(clip_by_global_norm(tc.grad_clip))

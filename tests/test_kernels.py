@@ -130,6 +130,68 @@ def test_galore_fused_adam_kernel_batched(shape):
         )
 
 
+def _fused_right_inputs(key, shape, dtype=jnp.float32):
+    lead, (m, r, n) = shape[:-3], shape[-3:]
+    ks = jax.random.split(key, 4)
+    P = _rand(ks[0], lead + (n, r), dtype)
+    G = _rand(ks[1], lead + (m, n), dtype)
+    M = jax.random.normal(ks[2], lead + (m, r), jnp.float32) * 0.01
+    V = jnp.abs(jax.random.normal(ks[3], lead + (m, r), jnp.float32)) * 1e-4
+    return P, G, M, V
+
+
+@pytest.mark.parametrize("n,r,m", PROJECT_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_galore_fused_adam_right_kernel(n, r, m, dtype):
+    """Dedicated right-side kernel (R = GP, G̃ = αN̂Pᵀ) vs its oracle — the
+    same shape sweep as the left kernel with the roles of m and n swapped."""
+    P, G, M, V = _fused_right_inputs(jax.random.PRNGKey(21), (m, r, n), dtype)
+    count = jnp.int32(7)
+    got = ops.galore_fused_adam_step_right(
+        P, G, M, V, count, alpha=0.25, use_pallas=True, interpret=True
+    )
+    want = ref.galore_fused_adam_step_right(
+        P.astype(jnp.float32), G.astype(jnp.float32), M, V, count, alpha=0.25
+    )
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    for name, a, b in zip(["update", "m", "v"], got, want):
+        np.testing.assert_allclose(
+            a, b, rtol=tol, atol=tol * max(np.abs(b).max(), 1e-3), err_msg=name
+        )
+
+
+@pytest.mark.parametrize("shape", [(1, 48, 16, 64), (3, 130, 16, 72), (2, 3, 96, 8, 40)])
+def test_galore_fused_adam_right_kernel_batched(shape):
+    """Stacked right-side leaves run as one batched-grid launch too."""
+    P, G, M, V = _fused_right_inputs(jax.random.PRNGKey(22), shape)
+    count = jnp.int32(3)
+    got = ops.galore_fused_adam_step_right(
+        P, G, M, V, count, alpha=1.0, use_pallas=True, interpret=True
+    )
+    want = ref.galore_fused_adam_step_right(P, G, M, V, count)
+    assert got[0].shape == G.shape and got[1].shape == M.shape
+    for name, a, b in zip(["update", "m", "v"], got, want):
+        np.testing.assert_allclose(
+            a, b, rtol=1e-5, atol=1e-5 * max(np.abs(b).max(), 1e-3), err_msg=name
+        )
+
+
+def test_galore_fused_right_matches_transposed_left():
+    """The dedicated right kernel must equal the old swapaxes formulation."""
+    m, n, r = 130, 72, 16  # m > n: a genuine right-side leaf
+    P, G, M, V = _fused_right_inputs(jax.random.PRNGKey(23), (m, r, n))
+    count = jnp.int32(5)
+    got = ops.galore_fused_adam_step_right(
+        P, G, M, V, count, alpha=0.25, use_pallas=True, interpret=True
+    )
+    sw = lambda x: jnp.swapaxes(x, -1, -2)
+    upd_t, m_t, v_t = ops.galore_fused_adam_step(
+        P, sw(G), sw(M), sw(V), count, alpha=0.25, use_pallas=True, interpret=True
+    )
+    for name, a, b in zip(["update", "m", "v"], got, (sw(upd_t), sw(m_t), sw(v_t))):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5, err_msg=name)
+
+
 def test_galore_fused_matches_unfused_kernel_sequence():
     """Fused kernel vs the three-kernel sequence it replaces (both Pallas)."""
     m, r, n = 72, 16, 130

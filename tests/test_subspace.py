@@ -1,0 +1,338 @@
+"""Subspace lifecycle manager: per-leaf ranks, staggered refresh, adaptive-T."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import GaLoreConfig, TrainConfig, get_config
+from repro.core.galore import (
+    galore,
+    galore_state_bytes,
+    plan_for_params,
+    refresh_projectors,
+)
+from repro.core.subspace import SubspaceManager, SubspacePlan, proj_shape, r_shape
+from repro.optim.adam import scale_by_adam
+from repro.optim.transform import GradientTransformation
+
+identity_inner = GradientTransformation(lambda p: (), lambda g, s, p=None: (g, s))
+
+
+def _params(key=None):
+    key = key or jax.random.PRNGKey(0)
+    return {
+        "wide": jax.random.normal(key, (48, 130)),
+        "tall": jax.random.normal(jax.random.fold_in(key, 1), (130, 48)),
+        "stack": jax.random.normal(jax.random.fold_in(key, 2), (3, 40, 96)),
+        "bias": jax.random.normal(jax.random.fold_in(key, 3), (130,)),
+    }
+
+
+def _grads(params, key, i=0):
+    return jax.tree_util.tree_map(
+        lambda p: jax.random.normal(jax.random.fold_in(key, 100 + i), p.shape), params
+    )
+
+
+# ---------------------------------------------------------------------------
+# Degenerate case: defaults must reproduce the fixed-(rank, T) original
+# ---------------------------------------------------------------------------
+
+
+def test_default_config_keeps_legacy_state_layout():
+    """No policy enabled -> no schedule key, plans carry the global rank/T."""
+    params = _params()
+    cfg = GaLoreConfig(rank=16, update_freq=5)
+    plans = plan_for_params(params, cfg)
+    for k in ("wide", "tall", "stack"):
+        assert plans[k].galore
+        assert plans[k].rank == 16
+        assert plans[k].refresh_period == 5
+        assert plans[k].refresh_offset == 0
+    opt = galore(scale_by_adam(), cfg)
+    st = opt.init(params)
+    assert set(st.keys()) == {"step", "key", "proj", "inner"}
+    _, st = opt.update(_grads(params, jax.random.PRNGKey(0)), st, params)
+    assert set(st.keys()) == {"step", "key", "proj", "inner"}
+
+
+def test_default_refresh_schedule_matches_every_T():
+    """Inline path refreshes exactly at steps 0, T, 2T... (legacy predicate)."""
+    key = jax.random.PRNGKey(3)
+    params = {"w": jax.random.normal(key, (24, 64))}
+    cfg = GaLoreConfig(rank=8, update_freq=3, projector="svd")
+    opt = galore(identity_inner, cfg)
+    st = opt.init(params)
+    changed = []
+    prev = np.zeros(proj_shape(params["w"], plan_for_params(params, cfg)["w"]))
+    for i in range(7):
+        _, st = opt.update(_grads(params, key, i), st, params)
+        cur = np.asarray(st["proj"]["w"])
+        changed.append(not np.allclose(cur, prev))
+        prev = cur.copy()
+    assert changed == [True, False, False, True, False, False, True]
+
+
+# ---------------------------------------------------------------------------
+# Per-leaf ranks
+# ---------------------------------------------------------------------------
+
+
+def test_rank_frac_and_overrides():
+    params = _params()
+    cfg = GaLoreConfig(rank=16, rank_frac=0.25, rank_overrides=(("wide", 8),))
+    plans = plan_for_params(params, cfg)
+    assert plans["wide"].rank == 8  # first-match override wins over frac
+    assert plans["tall"].rank == 12  # 0.25 * 48
+    assert plans["stack"].rank == 10  # 0.25 * 40
+    assert not plans["bias"].galore
+    # the gate uses the LEAF's rank: an override >= min dim disables galore
+    plans2 = plan_for_params(params, GaLoreConfig(rank=16, rank_overrides=(("tall", 48),)))
+    assert not plans2["tall"].galore and plans2["wide"].galore
+
+
+def test_ragged_ranks_flow_through_state_shapes():
+    params = _params()
+    cfg = GaLoreConfig(rank=16, update_freq=2, rank_frac=0.25)
+    opt = galore(scale_by_adam(), cfg)
+    st = opt.init(params)
+    plans = plan_for_params(params, cfg)
+    for k in ("wide", "tall", "stack"):
+        assert st["proj"][k].shape == proj_shape(params[k], plans[k])
+        assert st["inner"]["m"][k].shape == r_shape(params[k], plans[k])
+    u, st = opt.update(_grads(params, jax.random.PRNGKey(1)), st, params)
+    for k in params:
+        assert u[k].shape == params[k].shape
+
+
+def test_hetero_rank_fused_matches_composable():
+    """Fused kernels handle ragged ranks: one specialization per leaf."""
+    params = _params()
+    cfg = GaLoreConfig(rank=16, update_freq=2, scale=0.25, rank_frac=0.25,
+                       rank_overrides=(("stack", 6),))
+    comp = galore(scale_by_adam(), cfg)
+    fused = galore(scale_by_adam(), cfg, fused_adam=True, b1=0.9, b2=0.999, eps=1e-8)
+    st_c, st_f = comp.init(params), fused.init(params)
+    key = jax.random.PRNGKey(5)
+    for i in range(4):
+        g = _grads(params, key, i)
+        u_c, st_c = comp.update(g, st_c, params)
+        u_f, st_f = fused.update(g, st_f, params)
+        for k in params:
+            np.testing.assert_allclose(
+                np.asarray(u_c[k]), np.asarray(u_f[k]),
+                rtol=1e-5, atol=1e-5, err_msg=f"step {i} leaf {k}",
+            )
+
+
+def test_hetero_rank_reduces_state_bytes():
+    params = _params()
+    full = galore_state_bytes(params, GaLoreConfig(rank=16))
+    frac = galore_state_bytes(params, GaLoreConfig(rank=16, rank_frac=0.125))
+    assert frac["adam_state_elems"] < full["adam_state_elems"]
+    # exact accounting for one leaf: tall (130, 48) at rank 6 projects right
+    plans = plan_for_params(params, GaLoreConfig(rank=16, rank_frac=0.125))
+    assert plans["tall"].rank == 6
+    assert proj_shape(params["tall"], plans["tall"]) == (48, 6)
+    assert r_shape(params["tall"], plans["tall"]) == (130, 6)
+
+
+# ---------------------------------------------------------------------------
+# Staggered refresh
+# ---------------------------------------------------------------------------
+
+
+def test_stagger_offsets_deterministic_and_spread():
+    params = _params()
+    cfg = GaLoreConfig(rank=16, update_freq=12, refresh_stagger=True)
+    mgr = SubspaceManager(cfg)
+    plans = mgr.plans(params)
+    offsets = sorted(
+        pl.refresh_offset
+        for pl in jax.tree_util.tree_leaves(
+            plans, is_leaf=lambda x: isinstance(x, SubspacePlan))
+        if pl.galore
+    )
+    assert offsets == [0, 4, 8]  # 3 galore leaves spread over T=12
+    plans2 = mgr.plans(params)
+    assert plans == plans2  # deterministic across re-derivations
+
+
+def test_stagger_inline_refresh_amortizes():
+    """Each leaf refreshes at step 0 and then at its own offset phase."""
+    key = jax.random.PRNGKey(4)
+    params = {"a": jax.random.normal(key, (24, 64)),
+              "b": jax.random.normal(jax.random.fold_in(key, 1), (24, 64))}
+    cfg = GaLoreConfig(rank=8, update_freq=4, refresh_stagger=True)
+    plans = plan_for_params(params, cfg)
+    offs = {k: plans[k].refresh_offset for k in ("a", "b")}
+    assert sorted(offs.values()) == [0, 2]
+    opt = galore(identity_inner, cfg)
+    st = opt.init(params)
+    refreshed = {k: [] for k in offs}
+    prev = {k: np.zeros(st["proj"][k].shape) for k in offs}
+    for i in range(8):
+        _, st = opt.update(_grads(params, key, i), st, params)
+        for k in offs:
+            cur = np.asarray(st["proj"][k])
+            refreshed[k].append(not np.allclose(cur, prev[k]))
+            prev[k] = cur.copy()
+    for k, off in offs.items():
+        want = [(i == 0) or (i % 4 == off) for i in range(8)]
+        assert refreshed[k] == want, (k, off, refreshed[k])
+
+
+def test_partial_external_refresh_matches_inline_stagger():
+    """refresh_projectors(step=...) refreshes exactly the due leaves."""
+    key = jax.random.PRNGKey(6)
+    params = {"a": jax.random.normal(key, (24, 64)),
+              "b": jax.random.normal(jax.random.fold_in(key, 1), (24, 64))}
+    cfg = GaLoreConfig(rank=8, update_freq=4, refresh_stagger=True)
+    inline = galore(identity_inner, cfg)
+    ext = galore(identity_inner, cfg, external_refresh=True)
+    st_i, st_e = inline.init(params), ext.init(params)
+    for i in range(6):
+        g = _grads(params, key, i)
+        st_e = refresh_projectors(g, st_e, cfg, step=i)
+        _, st_i = inline.update(g, st_i, params)
+        _, st_e = ext.update(g, st_e, params)
+        for k in params:
+            np.testing.assert_allclose(
+                np.asarray(st_i["proj"][k]), np.asarray(st_e["proj"][k]),
+                rtol=1e-5, atol=1e-6, err_msg=f"step {i} leaf {k}",
+            )
+
+
+# ---------------------------------------------------------------------------
+# Adaptive-T
+# ---------------------------------------------------------------------------
+
+
+def test_adaptive_t_state_layout_and_checkpoint_keys():
+    params = _params()
+    cfg = GaLoreConfig(rank=8, update_freq=4, adaptive_t=True)
+    opt = galore(scale_by_adam(), cfg)
+    st = opt.init(params)
+    assert set(st.keys()) == {"step", "key", "proj", "inner", "schedule"}
+    assert set(st["schedule"].keys()) == {"period", "next", "overlap"}
+    _, st = opt.update(_grads(params, jax.random.PRNGKey(0)), st, params)
+    assert int(st["schedule"]["period"]["wide"]) >= 1
+
+
+def test_adaptive_t_stretches_on_stable_subspace():
+    """A gradient with a FIXED low-rank column space keeps overlap ~1 at every
+    refresh, so the leaf period doubles up to t_max."""
+    key = jax.random.PRNGKey(7)
+    U = jnp.linalg.qr(jax.random.normal(key, (48, 4)))[0]
+    params = {"w": jnp.zeros((48, 96))}
+    cfg = GaLoreConfig(rank=4, update_freq=2, adaptive_t=True, t_max=8,
+                       overlap_hi=0.9, projector="svd")
+    opt = galore(identity_inner, cfg)
+    st = opt.init(params)
+    periods = []
+    for i in range(12):
+        C = jax.random.normal(jax.random.fold_in(key, i), (4, 96))
+        g = {"w": U @ C}  # rotating within a FIXED 4-dim column space
+        _, st = opt.update(g, st, params)
+        periods.append(int(st["schedule"]["period"]["w"]))
+    assert periods[0] == 2  # no adaptation signal on the first refresh
+    assert periods[-1] == 8, periods  # stretched to t_max
+    assert float(st["schedule"]["overlap"]["w"]) > 0.9
+
+
+def test_adaptive_t_shrinks_on_rotating_subspace():
+    """Fresh random subspaces at every refresh (overlap ~ r/m << lo) shrink
+    the period toward t_min."""
+    key = jax.random.PRNGKey(8)
+    params = {"w": jnp.zeros((64, 96))}
+    cfg = GaLoreConfig(rank=4, update_freq=8, adaptive_t=True, t_min=2,
+                       overlap_lo=0.5, projector="svd")
+    opt = galore(identity_inner, cfg)
+    st = opt.init(params)
+    for i in range(30):
+        g = {"w": jax.random.normal(jax.random.fold_in(key, i), (64, 96))}
+        _, st = opt.update(g, st, params)
+    assert int(st["schedule"]["period"]["w"]) < 8
+    assert float(st["schedule"]["overlap"]["w"]) < 0.5
+
+
+def test_adaptive_t_external_refresh_roundtrip():
+    """External partial refresh drives the same schedule state machinery."""
+    key = jax.random.PRNGKey(9)
+    params = {"w": jax.random.normal(key, (32, 64))}
+    cfg = GaLoreConfig(rank=8, update_freq=3, adaptive_t=True)
+    ext = galore(identity_inner, cfg, external_refresh=True)
+    st = ext.init(params)
+    assert "schedule" in st
+    for i in range(7):
+        g = _grads(params, key, i)
+        st = refresh_projectors(g, st, cfg, step=i)
+        _, st = ext.update(g, st, params)
+    # refreshed at 0 then every period: next is in the future
+    assert int(st["schedule"]["next"]["w"]) >= 7
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: heterogeneous config through the real train step + sharding
+# ---------------------------------------------------------------------------
+
+
+def test_hetero_config_trains_through_train_step():
+    from repro.distributed.step import make_train_step
+
+    cfg = get_config("llama_60m", smoke=True)
+    tc = TrainConfig(optimizer="adamw", lr=1e-2,
+                     galore=GaLoreConfig(rank=8, update_freq=3, rank_frac=0.25,
+                                         refresh_stagger=True, adaptive_t=True))
+    step, opt = make_train_step(cfg, tc)
+    from repro.models import model as M
+
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(cfg, key)
+    state = opt.init(params)
+    batch = {"tokens": jax.random.randint(key, (2, 32), 0, cfg.vocab_size)}
+    losses = []
+    for _ in range(4):
+        params, state, metrics = step(params, state, batch)
+        losses.append(float(metrics["loss"]))
+    assert np.isfinite(losses).all()
+    assert losses[-1] < losses[0]
+
+
+def test_state_axes_cover_schedule_and_ragged_ranks():
+    """optimizer_state_axes zips with the real state tree for policy configs."""
+    from repro.distributed.state_sharding import optimizer_state_axes
+    from repro.models import model as M
+    from repro.optim.factory import build_optimizer
+
+    cfg = get_config("qwen2_7b", smoke=True)
+    tc = TrainConfig(optimizer="adamw",
+                     galore=GaLoreConfig(rank=8, rank_frac=0.25, adaptive_t=True,
+                                         refresh_stagger=True),
+                     galore_external_refresh=True)
+    opt = build_optimizer(tc, param_axes=M.param_axes(cfg))
+    p_struct = jax.eval_shape(lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+    s_struct = jax.eval_shape(opt.init, p_struct)
+    axes = optimizer_state_axes(tc, M.param_axes(cfg), p_struct)
+    jax.tree_util.tree_map(
+        lambda leaf, ax: None, s_struct, axes,
+        is_leaf=lambda x: hasattr(x, "shape"),
+    )
+
+
+def test_projector_seed_threaded_from_train_config():
+    from repro.optim.factory import build_optimizer
+
+    params = {"w": jnp.zeros((24, 64))}
+    for seed in (0, 5):
+        tc = TrainConfig(optimizer="adamw", galore=GaLoreConfig(rank=8), seed=seed)
+        opt = build_optimizer(tc)
+        st = opt.init(params)
+        from repro.optim.factory import galore_state_index
+
+        key = st[galore_state_index(tc)]["key"]
+        np.testing.assert_array_equal(
+            np.asarray(key), np.asarray(jax.random.PRNGKey(seed))
+        )
