@@ -46,16 +46,25 @@ def leaf_traffic(m: int, r: int, n: int, g_itemsize: int = 2) -> dict:
     Optimizer-path streams:
       unfused: P read ×2, R write+read, M/V read + M'/V' write, N̂ write+read
       fused:   P read ×1, M/V read + M'/V' write   (R/N̂ never leave VMEM)
+      fused8:  P read ×1, uint8 codes read + write (2·2·rn bytes) plus the
+               per-block absmax scales (2·2·4·rn/QBLOCK) — the int8 epilogue
+               moves ~4× fewer moment bytes than the f32 fused kernel
     """
+    from repro.quant.codec import QBLOCK
+
     mandatory = g_itemsize * m * n + F32 * m * n
     unfused_opt = 2 * F32 * m * r + 8 * F32 * r * n
     fused_opt = F32 * m * r + 4 * F32 * r * n
+    fused8_opt = F32 * m * r + 4 * r * n * (1 + F32 / QBLOCK)
     return {
         "unfused_bytes": mandatory + unfused_opt,
         "fused_bytes": mandatory + fused_opt,
+        "fused8_bytes": mandatory + fused8_opt,
         "unfused_opt_path_bytes": unfused_opt,
         "fused_opt_path_bytes": fused_opt,
+        "fused8_opt_path_bytes": fused8_opt,
         "opt_path_ratio": unfused_opt / fused_opt,
+        "opt_path_ratio_q8": unfused_opt / fused8_opt,
         "total_ratio": (mandatory + unfused_opt) / (mandatory + fused_opt),
         "kernel_launches_unfused": 3,
         "kernel_launches_fused": 1,
@@ -92,7 +101,11 @@ def _inputs(L, m, r, n, key):
 
 
 def bench_leaf(name, L, m, r, n, iters=5):
+    from repro.quant import codec
+
     P, G, M, V, count = _inputs(L, m, r, n, jax.random.PRNGKey(0))
+    mq, ms = codec.quantize_axis(M, axis=-1, signed=True)
+    vq, vs = codec.quantize_axis(V, axis=-1, signed=False)
 
     @jax.jit
     def unfused(P, G, M, V, count):
@@ -104,8 +117,14 @@ def bench_leaf(name, L, m, r, n, iters=5):
     def fused(P, G, M, V, count):
         return ops.galore_fused_adam_step(P, G, M, V, count, alpha=0.25)
 
+    @jax.jit
+    def fused_q8(P, G, mq, ms, vq, vs, count):
+        return ops.galore_fused_adam8_step(P, G, mq, ms, vq, vs, count,
+                                           alpha=0.25)
+
     t_unfused, _ = time_fn(unfused, P, G, M, V, count, iters=iters)
     t_fused, _ = time_fn(fused, P, G, M, V, count, iters=iters)
+    t_fused8, _ = time_fn(fused_q8, P, G, mq, ms, vq, vs, count, iters=iters)
     traffic = leaf_traffic(m, r, n, g_itemsize=G.dtype.itemsize)
     for k in list(traffic):
         if k.endswith("_bytes"):  # timings cover the whole L-stack; match
@@ -116,6 +135,7 @@ def bench_leaf(name, L, m, r, n, iters=5):
         "backend": jax.default_backend(),
         "unfused_us": t_unfused * 1e6,
         "fused_us": t_fused * 1e6,
+        "fused8_us": t_fused8 * 1e6,
         "speedup": t_unfused / t_fused,
         **traffic,
     }
@@ -123,6 +143,8 @@ def bench_leaf(name, L, m, r, n, iters=5):
          f"bytes={traffic['unfused_bytes']}")
     emit(f"kernel_fused_{name}", rec["fused_us"],
          f"bytes={traffic['fused_bytes']};opt_path_ratio={traffic['opt_path_ratio']:.2f}")
+    emit(f"kernel_fused8_{name}", rec["fused8_us"],
+         f"bytes={traffic['fused8_bytes']};opt_path_ratio_q8={traffic['opt_path_ratio_q8']:.2f}")
     return rec
 
 

@@ -28,12 +28,14 @@ from repro.utils import path_str
 def _flatten(tree):
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     out = {}
+    dtypes = {}
     for p, v in flat:
         arr = np.asarray(jax.device_get(v))
+        dtypes[path_str(p)] = arr.dtype.name
         if arr.dtype.name == "bfloat16":  # numpy can't serialize ml_dtypes
             arr = arr.astype(np.float32)  # lossless widening; restore re-casts
         out[path_str(p)] = arr
-    return out, treedef
+    return out, dtypes, treedef
 
 
 class CheckpointManager:
@@ -47,8 +49,14 @@ class CheckpointManager:
     # -- save ---------------------------------------------------------------
 
     def save(self, step: int, tree, extra_meta: dict | None = None, block: bool = False):
-        arrays, _ = _flatten(tree)
-        meta = {"step": step, "time": time.time(), **(extra_meta or {})}
+        arrays, dtypes, _ = _flatten(tree)
+        # original dtype of every leaf (npz widens bf16; uint8 quantization
+        # codes and f32 scales of the quantized optimizer trees round-trip
+        # verbatim) — restore() validates integer/float kind against the
+        # target tree so a quantized checkpoint can't be silently cast into
+        # an fp32 layout or vice versa
+        meta = {"step": step, "time": time.time(), "dtypes": dtypes,
+                **(extra_meta or {})}
         if self.async_save and not block:
             self.wait()  # never two concurrent saves
             self._thread = threading.Thread(
@@ -111,6 +119,11 @@ class CheckpointManager:
                 with np.load(os.path.join(path, name)) as z:
                     data.update({k: z[k] for k in z.files})
 
+        try:
+            saved_dtypes = self.meta(step).get("dtypes", {})
+        except FileNotFoundError:
+            saved_dtypes = {}
+
         flat, treedef = jax.tree_util.tree_flatten_with_path(target_tree)
         shard_flat = (
             jax.tree_util.tree_leaves(shardings) if shardings is not None else [None] * len(flat)
@@ -122,6 +135,18 @@ class CheckpointManager:
                 raise KeyError(f"checkpoint missing leaf {key}")
             arr = np.asarray(data[key])
             if hasattr(leaf, "dtype"):
+                saved = saved_dtypes.get(key)
+                if saved is not None:
+                    # float family ('f' + ml_dtypes' 'V' for bf16) vs integer
+                    fam = lambda d: "int" if np.dtype(d).kind in "iu" else "float"
+                    if fam(saved) != fam(leaf.dtype):
+                        raise ValueError(
+                            f"checkpoint leaf {key} was saved as {saved} but the "
+                            f"target tree expects {np.dtype(leaf.dtype).name} — "
+                            f"quantized and fp32 state layouts are not "
+                            f"interchangeable (rebuild the state with the "
+                            f"matching QuantPolicy)"
+                        )
                 arr = arr.astype(leaf.dtype)
             out.append(jax.device_put(arr, sh) if sh is not None else jax.device_put(arr))
         return jax.tree_util.tree_unflatten(treedef, out)

@@ -10,6 +10,8 @@ import dataclasses
 import importlib
 from typing import Callable, Optional
 
+from repro.quant.policy import QuantPolicy
+
 # ---------------------------------------------------------------------------
 # Input-shape cells (shared across LM-family archs)
 # ---------------------------------------------------------------------------
@@ -135,6 +137,10 @@ class GaLoreConfig:
     t_max: int = 0  # adaptive period ceiling; 0 -> 8 * update_freq
     overlap_hi: float = 0.9  # stretch the leaf period when refresh overlap >= hi
     overlap_lo: float = 0.5  # shrink it when overlap < lo
+    # --- quantized optimizer state (src/repro/quant/) ---
+    # All-fp32 default keeps the state layout bit-identical to the unquantized
+    # original; resolved into per-leaf SubspacePlan.moments / .proj_store.
+    quant: QuantPolicy = QuantPolicy()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -157,6 +163,9 @@ class TrainConfig:
     galore_external_refresh: bool = False  # refresh P in a separate jitted step
     galore_fused_adam: bool = False  # single-kernel project→Adam→back per leaf
     # (requires optimizer adam/adamw; see kernels/galore_fused.py)
+    galore_fused_apply: bool = False  # fold W ← W + G̃ into the fused-kernel
+    # epilogue (requires galore_fused_adam; drops the full-size f32 update
+    # write — the two-step chain path remains the numerics oracle)
     z_loss: float = 0.0
 
 

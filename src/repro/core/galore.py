@@ -25,6 +25,15 @@ When the inner optimizer is plain Adam, `fused_adam=True` collapses steps
 2-4 into one Pallas kernel per leaf (kernels/galore_fused.py) with identical
 numerics and state layout; the composable path here is the oracle.
 
+Quantized state (GaLoreConfig.quant, src/repro/quant/): when the policy
+quantizes moments, galore manages the Adam math itself (the inner transform
+is bypassed, so b1/b2/eps are required exactly as for fused_adam) and int8
+leaves store {"q": codes, "scale": absmax} dicts in place of the fp32 m/v
+arrays — in the axis-blocked layout the fused kernels consume, so the
+dequant→Adam→requant epilogue runs in one VMEM pass on TPU. Quantized
+projectors (bf16 / packed int4) are dequantized on read in every path. The
+all-fp32 default leaves both layout and numerics bit-identical.
+
 State layout:
     {"step", "key", "proj": {path-matching subtree of P arrays}, "inner": ...}
 plus, only when the adaptive-T policy is on, "schedule": per-leaf
@@ -36,6 +45,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import GaLoreConfig
+from repro.core.projector import init_projector_state, read_projector
 from repro.core.subspace import (
     DEFAULT_EXCLUDE,
     LeafPlan,
@@ -47,6 +57,7 @@ from repro.core.subspace import (
     rank_axis,
 )
 from repro.optim.transform import GradientTransformation
+from repro.quant import codec
 from repro.utils import logical_constraint
 
 
@@ -119,6 +130,16 @@ def galore(
         raise ValueError(
             "fused_adam=True requires explicit b1/b2/eps matching the inner Adam"
         )
+    quantized = cfg.quant.quantizes_moments
+    if quantized and None in (b1, b2, eps):
+        raise ValueError(
+            "quantized moments (QuantPolicy.moments='int8') bypass the inner "
+            "transform — explicit b1/b2/eps matching an Adam inner are required"
+        )
+    if quantized and pre_projected:
+        raise ValueError(
+            "quantized moments are incompatible with pre_projected gradients"
+        )
     mgr = SubspaceManager(cfg, exclude, param_axes)
 
     def init(params):
@@ -128,7 +149,7 @@ def galore(
             if not plan.galore:
                 # scalar placeholder keeps the tree structure aligned with params
                 return jnp.zeros((), jnp.float32)
-            return jnp.zeros(proj_shape(p, plan), jnp.float32)
+            return init_projector_state(proj_shape(p, plan), plan.proj_store)
 
         def inner_struct(p, plan):
             if not plan.galore:
@@ -136,12 +157,16 @@ def galore(
             return jnp.zeros(r_shape(p, plan), jnp.float32)
 
         proj = jax.tree_util.tree_map(proj_init, params, plans)
-        projected_params = jax.tree_util.tree_map(inner_struct, params, plans)
+        if quantized:
+            inner_state = _managed_adam_init(params, plans)
+        else:
+            projected_params = jax.tree_util.tree_map(inner_struct, params, plans)
+            inner_state = inner.init(projected_params)
         state = {
             "step": jnp.zeros((), jnp.int32),
             "key": jax.random.PRNGKey(seed),
             "proj": proj,
-            "inner": inner.init(projected_params),
+            "inner": inner_state,
         }
         sched = mgr.init_schedule(params, plans)
         if sched is not None:
@@ -163,12 +188,19 @@ def galore(
                 grads, state["proj"], sched, plans, key, step=step
             )
 
-        if fused_adam:
-            # --- 2-4 fused) one kernel per galore leaf: project → Adam →
-            # back-project without materializing R/N̂ (ops dispatches Pallas
-            # on TPU, the ref oracle elsewhere) ---
-            updates, inner_state = _fused_adam_update(
-                grads, proj, state["inner"], plans, cfg, b1, b2, eps
+        # persistent P may be stored bf16 / packed int4 — dequantize once per
+        # step; the f32 copy is transient (consumed by the projection matmuls)
+        proj32 = _read_proj_tree(plan_src, proj, plans)
+
+        if quantized or fused_adam:
+            # --- 2-4 managed) galore owns the Adam math, bypassing the inner
+            # transform: fused leaves run one kernel (project → Adam →
+            # back-project, R/N̂ never leave VMEM; ops dispatches Pallas on
+            # TPU, the ref oracle elsewhere) and int8 leaves additionally get
+            # the dequant→Adam→requant epilogue in either mode ---
+            updates, inner_state = _managed_adam_update(
+                grads, proj32, state["inner"], plans, cfg, b1, b2, eps,
+                fused=fused_adam,
             )
         else:
             # --- 2) project gradients into the compact space ---
@@ -177,7 +209,7 @@ def galore(
                     return g
                 return _project(g, P, plan)
 
-            lor_grads = jax.tree_util.tree_map(proj_leaf, grads, proj, plans)
+            lor_grads = jax.tree_util.tree_map(proj_leaf, grads, proj32, plans)
 
             # --- 3) inner optimizer in the compact space ---
             lor_updates, inner_state = inner.update(lor_grads, state["inner"], params)
@@ -189,7 +221,7 @@ def galore(
                 full = _project_back(u.astype(jnp.float32), P, plan)
                 return cfg.scale * full  # apply_updates casts to the param dtype
 
-            updates = jax.tree_util.tree_map(back_leaf, lor_updates, proj, plans)
+            updates = jax.tree_util.tree_map(back_leaf, lor_updates, proj32, plans)
         new_state = {
             "step": step + 1,
             "key": state["key"],
@@ -203,53 +235,210 @@ def galore(
     return GradientTransformation(init, update)
 
 
-def _fused_adam_update(grads, proj, inner_state, plans, cfg: GaLoreConfig,
-                       b1: float, b2: float, eps: float):
-    """Adam step bypassing the generic inner transform (the fused fast path).
+def _read_proj_tree(ref_tree, proj, plans):
+    """Dequant-on-read over the whole projector tree (no-op for fp32 storage).
+
+    `ref_tree` supplies the full WEIGHT shapes (params or full-shape grads)
+    from which each leaf's projector shape is derived."""
+    return jax.tree_util.tree_map(
+        lambda p, P, plan: (read_projector(P, proj_shape(p, plan))
+                            if plan.galore else P),
+        ref_tree, proj, plans,
+    )
+
+
+def _moment_quant_axis(plan: SubspacePlan) -> int:
+    """Blocked axis of an int8 moment leaf: the fused kernel's swept axis for
+    galore leaves (last on the left, second-to-last on the right), the last
+    axis for full-shape passthrough leaves."""
+    if not plan.galore:
+        return -1
+    return -1 if plan.side == "left" else -2
+
+
+def _managed_adam_init(params, plans):
+    """scale_by_adam-layout state with per-plan quantized leaves: int8 leaves
+    hold {"q": codes, "scale": absmax} in the axis-blocked codec layout."""
+
+    def per_leaf(p, plan, signed):
+        shape = r_shape(p, plan) if plan.galore else p.shape
+        zeros = jnp.zeros(shape, jnp.float32)
+        if plan.moments == "int8":
+            return codec.quant_axis_state(
+                zeros, axis=_moment_quant_axis(plan), signed=signed)
+        return zeros
+
+    t = jax.tree_util.tree_map
+    return {
+        "m": t(lambda p, pl: per_leaf(p, pl, True), params, plans),
+        "v": t(lambda p, pl: per_leaf(p, pl, False), params, plans),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def _managed_adam_update(grads, proj32, inner_state, plans, cfg: GaLoreConfig,
+                         b1: float, b2: float, eps: float, *, fused: bool,
+                         params=None, eta: float | jnp.ndarray = 0.0,
+                         wd: float = 0.0):
+    """Adam step bypassing the generic inner transform (fused fast path,
+    quantized moments, and the in-place weight apply — one implementation).
 
     Galore leaves run the side-matched fused kernel (single HBM pass, moments
-    updated in place); other leaves get the same Adam math at full shape.
-    Reads and writes the scale_by_adam state layout {m, v, count}. Per-leaf
-    ranks are carried by the array shapes — each distinct (side, m, r, n)
-    gets its own kernel specialization, which is exactly what Pallas wants."""
+    updated in place) when `fused`, else the composable project → Adam →
+    back-project composition; int8-moment leaves (plan.moments) run the
+    dequant→Adam→requant epilogue in either mode. Other leaves get the same
+    Adam math at full shape. Reads and writes the scale_by_adam state layout
+    {m, v, count} (int8 leaves store {"q", "scale"} dicts). Per-leaf ranks
+    are carried by the array shapes — each distinct (side, m, r, n) gets its
+    own kernel specialization, which is exactly what Pallas wants.
+
+    With `params` given, the weight update is folded in: returns
+    (new_params, state) where W' = W + eta·(update + wd·W) — the fused-apply
+    epilogue (galore leaves never materialize a full-size f32 update).
+    Without it, returns (updates, state)."""
     from repro.kernels import ops, ref
 
+    apply_w = params is not None
     count = inner_state["count"] + 1
 
-    def leaf(g, P, m, v, plan):
+    def dequant_mv(m_st, v_st, plan):
+        ax = _moment_quant_axis(plan)
+        return (codec.dequant_axis_state(m_st, axis=ax, signed=True),
+                codec.dequant_axis_state(v_st, axis=ax, signed=False))
+
+    def requant_mv(m_t, v_t, plan):
+        ax = _moment_quant_axis(plan)
+        return (codec.quant_axis_state(m_t, axis=ax, signed=True),
+                codec.quant_axis_state(v_t, axis=ax, signed=False))
+
+    def finish(out, p):
+        """Fold eta/wd into the weight when applying, else emit the update."""
+        if not apply_w:
+            return out
+        w32 = p.astype(jnp.float32)
+        return (w32 + eta * (out.astype(jnp.float32) + wd * w32)).astype(p.dtype)
+
+    def leaf(g, P, m_st, v_st, plan, p):
+        qm = plan.moments == "int8"
         if not plan.galore:
             # same bias-corrected Adam math as the kernel, from the single
             # source of truth (also what scale_by_adam computes)
+            if qm:
+                m, v = dequant_mv(m_st, v_st, plan)
+            else:
+                m, v = m_st, v_st
             out, m_t, v_t = ref.lowrank_adam_update(g, m, v, count, b1, b2, eps)
-            return out.astype(g.dtype), m_t, v_t
-        if plan.side == "right":
-            # dedicated transposed-blockspec kernel: R = G P, G̃ = α N̂ Pᵀ —
-            # no swapaxes round-trips on g/m/v
-            upd, m_t, v_t = ops.galore_fused_adam_step_right(
-                P, g, m, v, count, b1=b1, b2=b2, eps=eps, alpha=cfg.scale
-            )
+            if qm:
+                m_t, v_t = requant_mv(m_t, v_t, plan)
+            return finish(out.astype(g.dtype), p), m_t, v_t
+
+        if fused and qm:
+            left = plan.side == "left"
+            if apply_w:
+                fn = (ops.galore_fused_adam8_apply_step if left
+                      else ops.galore_fused_adam8_apply_step_right)
+                out = fn(P, g, p, m_st["q"], m_st["scale"], v_st["q"],
+                         v_st["scale"], count, b1=b1, b2=b2, eps=eps,
+                         alpha=cfg.scale, eta=eta, wd=wd)
+            else:
+                fn = (ops.galore_fused_adam8_step if left
+                      else ops.galore_fused_adam8_step_right)
+                out = fn(P, g, m_st["q"], m_st["scale"], v_st["q"],
+                         v_st["scale"], count, b1=b1, b2=b2, eps=eps,
+                         alpha=cfg.scale)
+            upd, mq, ms, vq, vs = out
+            m_t, v_t = {"q": mq, "scale": ms}, {"q": vq, "scale": vs}
+        elif fused:
+            left = plan.side == "left"
+            if apply_w:
+                fn = (ops.galore_fused_adam_apply_step if left
+                      else ops.galore_fused_adam_apply_step_right)
+                upd, m_t, v_t = fn(P, g, p, m_st, v_st, count, b1=b1, b2=b2,
+                                   eps=eps, alpha=cfg.scale, eta=eta, wd=wd)
+            else:
+                # dedicated transposed-blockspec kernel on the right: R = G P,
+                # G̃ = α N̂ Pᵀ — no swapaxes round-trips on g/m/v
+                fn = (ops.galore_fused_adam_step if left
+                      else ops.galore_fused_adam_step_right)
+                upd, m_t, v_t = fn(P, g, m_st, v_st, count, b1=b1, b2=b2,
+                                   eps=eps, alpha=cfg.scale)
         else:
-            upd, m_t, v_t = ops.galore_fused_adam_step(
-                P, g, m, v, count, b1=b1, b2=b2, eps=eps, alpha=cfg.scale
-            )
+            # composable managed path (the oracle for the quantized kernels)
+            R = _project(g, P, plan)
+            if qm:
+                m, v = dequant_mv(m_st, v_st, plan)
+            else:
+                m, v = m_st, v_st
+            N, m_t, v_t = ref.lowrank_adam_update(R, m, v, count, b1, b2, eps)
+            upd = cfg.scale * _project_back(N, P, plan)
+            if qm:
+                m_t, v_t = requant_mv(m_t, v_t, plan)
+            upd = finish(upd, p)
         upd = logical_constraint(upd, *_lead(upd, plan.ax_m, plan.ax_n))
         return upd, m_t, v_t
 
     flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_p = (treedef.flatten_up_to(params) if apply_w
+              else [None] * len(flat_g))
     flat = [
-        leaf(g, P, m, v, plan)
-        for g, P, m, v, plan in zip(
+        leaf(g, P, m, v, plan, p)
+        for g, P, m, v, plan, p in zip(
             flat_g,
-            treedef.flatten_up_to(proj),
+            treedef.flatten_up_to(proj32),
             treedef.flatten_up_to(inner_state["m"]),
             treedef.flatten_up_to(inner_state["v"]),
             treedef.flatten_up_to(plans),
+            flat_p,
         )
     ]
     updates = treedef.unflatten([t[0] for t in flat])
     new_m = treedef.unflatten([t[1] for t in flat])
     new_v = treedef.unflatten([t[2] for t in flat])
     return updates, {"m": new_m, "v": new_v, "count": count}
+
+
+def make_fused_apply(cfg: GaLoreConfig, *, b1: float, b2: float, eps: float,
+                     weight_decay: float = 0.0, exclude=DEFAULT_EXCLUDE,
+                     param_axes=None, external_refresh: bool = False):
+    """The W-in-place fast path: returns
+        apply_step(params, grads, galore_state, eta) -> (params', galore_state')
+    where every galore leaf runs ONE kernel that folds the weight update into
+    the fused epilogue — W' = W + eta·(α P N̂ + wd·W) with W aliased in place,
+    so the full-size f32 update write of the emit path disappears (eta is the
+    launcher's -lr for this step; weight decay matches the AdamW chain
+    ordering clip → galore → +wd·W → ·(-lr)). Passthrough leaves get the
+    identical math at full shape. State layout and refresh behavior are
+    exactly `galore(...)`'s — checkpoints swap freely between the two paths,
+    and the emit path + chain remains the numerics oracle (enforced by
+    tests/test_quant.py)."""
+    mgr = SubspaceManager(cfg, exclude, param_axes)
+
+    def apply_step(params, grads, galore_state, eta):
+        plans = mgr.plans(grads)
+        step = galore_state["step"]
+        sched = galore_state.get("schedule")
+        if external_refresh:
+            proj = galore_state["proj"]
+        else:
+            key = jax.random.fold_in(galore_state["key"], step)
+            proj, sched = mgr.refresh_tree(
+                grads, galore_state["proj"], sched, plans, key, step=step)
+        proj32 = _read_proj_tree(grads, proj, plans)
+        new_params, inner_state = _managed_adam_update(
+            grads, proj32, galore_state["inner"], plans, cfg, b1, b2, eps,
+            fused=True, params=params, eta=eta, wd=weight_decay,
+        )
+        new_state = {
+            "step": step + 1,
+            "key": galore_state["key"],
+            "proj": proj,
+            "inner": inner_state,
+        }
+        if sched is not None:
+            new_state["schedule"] = sched
+        return new_params, new_state
+
+    return apply_step
 
 
 def refresh_projectors(grads, galore_state, cfg: GaLoreConfig,
@@ -277,15 +466,29 @@ def refresh_projectors(grads, galore_state, cfg: GaLoreConfig,
     return out
 
 
+# bytes per element of persistent storage, scale overhead included
+_PROJ_BYTES = {"fp32": 4.0, "bf16": 2.0,
+               "int4": 0.5 + 4.0 / codec.BLOCK}   # packed nibbles + absmax/256
+_MOMENT_BYTES = {"fp32": 4.0,
+                 "int8": 1.0 + 4.0 / codec.QBLOCK}  # codes + absmax/128
+
+
 def galore_state_bytes(params, cfg: GaLoreConfig, exclude=DEFAULT_EXCLUDE) -> dict:
     """Analytic memory accounting (paper Table 1): projector + compact moments.
 
     Uses each leaf's OWN rank from its SubspacePlan, so heterogeneous-rank
-    configs (rank_frac / rank_overrides) report their true reduced footprint."""
+    configs (rank_frac / rank_overrides) report their true reduced footprint,
+    and each leaf's resolved QuantPolicy modes, so the byte totals reflect
+    the REAL quantized storage (int8 codes + per-block absmax, packed int4
+    projectors) — the numbers behind the paper's 8-bit GaLore table
+    (benchmarks/memory_breakdown.py cross-checks the 82.5 % claim)."""
     plans = plan_for_params(params, cfg, exclude)
     proj_elems = 0
     moment_elems = 0
     full_moment_elems = 0
+    proj_bytes = 0.0
+    moment_bytes = 0.0
+    total_params = 0
     import numpy as np
 
     for (path, p), (_, plan) in zip(
@@ -293,14 +496,29 @@ def galore_state_bytes(params, cfg: GaLoreConfig, exclude=DEFAULT_EXCLUDE) -> di
         jax.tree_util.tree_leaves_with_path(plans, is_leaf=lambda x: isinstance(x, SubspacePlan)),
     ):
         size = int(np.prod(p.shape))
+        total_params += size
+        mom_b = _MOMENT_BYTES[plan.moments]
         if plan.galore:
-            proj_elems += int(np.prod(proj_shape(p, plan)))
-            moment_elems += int(np.prod(r_shape(p, plan)))
+            pe = int(np.prod(proj_shape(p, plan)))
+            me = int(np.prod(r_shape(p, plan)))
+            proj_elems += pe
+            moment_elems += me
+            proj_bytes += pe * _PROJ_BYTES[plan.proj_store]
+            moment_bytes += 2 * me * mom_b
         else:
             full_moment_elems += size
+            moment_bytes += 2 * size * mom_b
+    fp32_adam = 8 * total_params  # m + v, fp32, no projector
+    opt_bytes = proj_bytes + moment_bytes
     return {
         "projector_elems": proj_elems,
         "lowrank_moment_elems_each": moment_elems,
         "fullrank_moment_elems_each": full_moment_elems,
         "adam_state_elems": proj_elems + 2 * (moment_elems + full_moment_elems),
+        # policy-aware byte totals (fp32 default: elems × 4, bit-compatible)
+        "projector_bytes": proj_bytes,
+        "moment_bytes": moment_bytes,
+        "optimizer_state_bytes": opt_bytes,
+        "fp32_adam_state_bytes": fp32_adam,
+        "reduction_vs_fp32_adam": 1.0 - opt_bytes / max(fp32_adam, 1),
     }

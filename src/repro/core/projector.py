@@ -191,6 +191,46 @@ def compute_projector(
     return fn(G, key).astype(jnp.float32)
 
 
+# ---------------------------------------------------------------------------
+# Projector storage (quantized-optimizer-state subsystem, src/repro/quant/)
+#
+# The persistent copy of P between refreshes may be fp32 (the original), bf16
+# (2×), or packed INT4 with per-block absmax (Q-GaLore, ~8× smaller). Every
+# consumer reads through `read_projector`, which dequantizes on read: the
+# fp32 P then exists only transiently (it is consumed by the projection
+# matmuls / fused kernel and freed), while the state of record — what lives
+# in HBM across steps, gets checkpointed, and gets sharded — stays packed.
+# ---------------------------------------------------------------------------
+
+
+def store_projector(P: jnp.ndarray, mode: str = "fp32"):
+    """f32 projector -> its persistent storage form (array or int4 qstate)."""
+    from repro.quant.codec import quant4_state
+
+    if mode == "fp32":
+        return P.astype(jnp.float32)
+    if mode == "bf16":
+        return P.astype(jnp.bfloat16)
+    if mode == "int4":
+        return quant4_state(P)
+    raise ValueError(f"unknown projector storage mode {mode!r}")
+
+
+def read_projector(stored, shape=None) -> jnp.ndarray:
+    """Dequant-on-read: storage form -> f32 P (shape required for int4)."""
+    from repro.quant.codec import dequant4_state, is_qstate
+
+    if is_qstate(stored):
+        assert shape is not None, "int4 projector read needs the logical shape"
+        return dequant4_state(stored, shape)
+    return stored.astype(jnp.float32)
+
+
+def init_projector_state(shape, mode: str = "fp32"):
+    """Zeros in the requested storage form (int4 zeros round-trip exactly)."""
+    return store_projector(jnp.zeros(shape, jnp.float32), mode)
+
+
 def subspace_overlap(P: jnp.ndarray, P_ref: jnp.ndarray) -> jnp.ndarray:
     """Mean squared principal cosine between two column subspaces (1.0 = same).
 

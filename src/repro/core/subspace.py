@@ -36,9 +36,15 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import GaLoreConfig
-from repro.core.projector import compute_projector, subspace_overlap
+from repro.core.projector import (
+    compute_projector,
+    read_projector,
+    store_projector,
+    subspace_overlap,
+)
 from repro.utils import logical_constraint, path_str
 
 DEFAULT_EXCLUDE = ("embed", "dec_pos")
@@ -62,6 +68,10 @@ class SubspacePlan:
     rank: int = 0  # this leaf's projection rank (0 for non-galore leaves)
     refresh_period: int = 0  # base T for this leaf
     refresh_offset: int = 0  # deterministic stagger phase in [0, refresh_period)
+    # --- quantized state (QuantPolicy resolved per leaf, src/repro/quant/) ---
+    moments: str = "fp32"  # "fp32" | "int8" — Adam M/V storage for this leaf
+    # (compact moments for galore leaves, full-shape for passthrough leaves)
+    proj_store: str = "fp32"  # "fp32" | "bf16" | "int4" — persistent P storage
 
 
 # Backwards-compatible name: consumers that only read galore/side/ax_* keep
@@ -158,19 +168,24 @@ class SubspaceManager:
         raw: list[SubspacePlan] = []
         for pth, p in flat:
             path = path_str(pth)
+            # min_quant_size is gated on the leaf's FULL element count (the
+            # weight, not the compact moment) — see quant/policy.py
+            size = int(np.prod(p.shape)) if hasattr(p, "shape") else 0
+            moments, proj_store = cfg.quant.resolve(path, size)
             if not hasattr(p, "ndim") or p.ndim < 2 or any(e in path for e in self.exclude):
-                raw.append(SubspacePlan(False))
+                raw.append(SubspacePlan(False, moments=moments))
                 continue
             m, n = p.shape[-2], p.shape[-1]
             rank = self.leaf_rank(path, m, n)
             if min(m, n) <= max(rank, cfg.min_dim):
-                raw.append(SubspacePlan(False))
+                raw.append(SubspacePlan(False, moments=moments))
                 continue
             ax = ax_map.get(path)
             raw.append(SubspacePlan(
                 True, "left" if m <= n else "right",
                 ax[-2] if ax else None, ax[-1] if ax else None,
                 rank=rank, refresh_period=cfg.update_freq,
+                moments=moments, proj_store=proj_store,
             ))
 
         n_galore = sum(1 for pl in raw if pl.galore)
@@ -232,10 +247,26 @@ class SubspaceManager:
         nxt_tree = sched["next"] if adaptive else jax.tree_util.tree_map(zero_i, grads)
         ov_tree = sched["overlap"] if adaptive else jax.tree_util.tree_map(zero_f, grads)
 
-        def compute_new(g, P_old, plan, per, nxt, ov_old):
+        def compute_new(g, P_store, plan, per, nxt, ov_old):
+            # P may be stored quantized (bf16 / packed int4, per plan) —
+            # dequantize on read; the new projector is re-stored in the same
+            # form so the state of record stays packed.
+            P_old = read_projector(P_store, proj_shape(g, plan))
             P_new = compute_leaf_projector(g, plan, cfg, key)
+            new_store = store_projector(P_new, plan.proj_store)
+            if plan.proj_store == "int4" and cfg.quant.lazy_refresh:
+                # Q-GaLore lazy refresh: identical int4 codes mean the new
+                # subspace is indistinguishable at 4-bit resolution — keep
+                # the old codes AND scales (zero state churn; adaptive-T
+                # additionally stretches the period so the SVD itself is
+                # skipped on leaves that stay stable).
+                changed = jnp.any(new_store["q"] != P_store["q"])
+                new_store = jax.tree_util.tree_map(
+                    lambda new, old: jnp.where(changed, new, old),
+                    new_store, P_store,
+                )
             if not adaptive:
-                return P_new, per, nxt, ov_old
+                return new_store, per, nxt, ov_old
             ov = subspace_overlap_mean(P_new, P_old)
             # no adaptation signal on the very first refresh (P_old is zeros)
             has_old = jnp.sum(jnp.abs(P_old)) > 0
@@ -247,7 +278,7 @@ class SubspaceManager:
             first = (jnp.asarray(step) == 0) & (plan.refresh_offset > 0)
             nxt2 = jnp.where(first, plan.refresh_offset,
                              jnp.asarray(step) + per2).astype(jnp.int32)
-            return P_new, per2.astype(jnp.int32), nxt2, jnp.where(has_old, ov, 0.0)
+            return new_store, per2.astype(jnp.int32), nxt2, jnp.where(has_old, ov, 0.0)
 
         def due_of(plan, nxt):
             if force_all:

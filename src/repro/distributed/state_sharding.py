@@ -10,6 +10,17 @@ state layout gets axes derived from the parameter axes:
   adafactor   vr drops the last param dim, vc the second-to-last
   galore      P (..., proj_dim, r) keeps the projected weight dim's axis;
               inner state lives on projected shapes (r on the dropped side)
+
+Quantized state (GaLoreConfig.quant): int8 moment leaves become
+{"q": codes, "scale": absmax} — codes keep the logical moment shape and
+shard exactly like the fp32 moments they replace; the per-block scales
+(1/128 of the codes' bytes) stay replicated, since sharding a blocked dim
+whose extent is ceil(n/128) rarely divides the mesh and the cost of
+replication is negligible. Packed int4 projectors shard their flat block
+dim on the FSDP axis like the adam8bit payloads. All axes derive from the
+same per-leaf SubspacePlans the optimizer uses (via
+factory.effective_galore_config), so the axes tree always zips with the
+real state tree.
 """
 from __future__ import annotations
 
@@ -84,6 +95,9 @@ def _galore_proj_axes(p_axes, p_struct, gcfg: GaLoreConfig):
     def per_leaf(ax, plan):
         if not plan.galore:
             return SCALAR  # scalar placeholder
+        if plan.proj_store == "int4":
+            # packed flat blocks: shard the block dim like adam8bit payloads
+            return QBLOCK_AXES
         kept = ax[-2] if plan.side == "left" else ax[-1]
         # P's rank dim stays replicated (see core/projector.py sharding note)
         return tuple(ax[:-2]) + (kept, None)
@@ -91,6 +105,22 @@ def _galore_proj_axes(p_axes, p_struct, gcfg: GaLoreConfig):
     return jax.tree_util.tree_map(
         per_leaf, p_axes, plans, is_leaf=is_axes
     )
+
+
+def _galore_quant_inner_axes(p_axes, p_struct, gcfg: GaLoreConfig):
+    """Axes for the galore-MANAGED Adam state ({m, v, count}) when the quant
+    policy is active: int8 leaves carry {"q", "scale"} dicts — codes shard
+    like the fp32 moment they replace, scales stay replicated."""
+    plans = plan_for_params(p_struct, gcfg)
+    proj_ax = _projected_axes(p_axes, p_struct, gcfg)
+
+    def per_leaf(ax, plan):
+        if plan.moments == "int8":
+            return {"q": ax, "scale": tuple(None for _ in ax)}
+        return ax
+
+    mv = jax.tree_util.tree_map(per_leaf, proj_ax, plans, is_leaf=is_axes)
+    return {"m": mv, "v": mv, "count": SCALAR}  # axes trees are read-only
 
 
 def _projected_struct(p_struct, gcfg: GaLoreConfig):
@@ -127,16 +157,23 @@ def _stats_axes(tc: TrainConfig, p_axes, p_struct):
 
 def optimizer_state_axes(tc: TrainConfig, p_axes, p_struct):
     """Axes tree exactly matching build_optimizer(tc).init(params) structure."""
-    if tc.galore is not None:
-        inner_axes = _stats_axes(tc, _projected_axes(p_axes, p_struct, tc.galore),
-                                 _projected_struct(p_struct, tc.galore))
+    from repro.optim.factory import effective_galore_config
+
+    gcfg = effective_galore_config(tc)
+    if gcfg is not None:
+        if gcfg.quant.quantizes_moments:
+            # galore-managed Adam (int8 moments bypass the inner transform)
+            inner_axes = _galore_quant_inner_axes(p_axes, p_struct, gcfg)
+        else:
+            inner_axes = _stats_axes(tc, _projected_axes(p_axes, p_struct, gcfg),
+                                     _projected_struct(p_struct, gcfg))
         stats_axes = {
             "step": SCALAR,
             "key": SCALAR,
-            "proj": _galore_proj_axes(p_axes, p_struct, tc.galore),
+            "proj": _galore_proj_axes(p_axes, p_struct, gcfg),
             "inner": inner_axes,
         }
-        if tc.galore.adaptive_t:
+        if gcfg.adaptive_t:
             stats_axes["schedule"] = _galore_schedule_axes(p_axes)
     else:
         stats_axes = _stats_axes(tc, p_axes, p_struct)

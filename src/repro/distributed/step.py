@@ -35,6 +35,12 @@ def make_train_step(cfg: ModelConfig, tc: TrainConfig, rules: Optional[ShardingR
     if tc.galore_dp_compress:
         return _make_compressed_train_step(cfg, tc, rules, opt, loss_of), opt
 
+    if tc.galore_fused_apply:
+        if tc.microbatch and tc.microbatch > 1:
+            raise ValueError("galore_fused_apply does not compose with "
+                             "gradient accumulation yet (microbatch > 1)")
+        return _make_fused_apply_train_step(cfg, tc, rules, opt, loss_of), opt
+
     def train_step(params, opt_state, batch):
         with sharding_context(rules):
             if tc.microbatch and tc.microbatch > 1:
@@ -87,6 +93,8 @@ def _make_compressed_train_step(cfg, tc, rules, opt, loss_of):
     deferred until after the projection einsum.
     """
     from repro.core.galore import _project, plan_for_params
+    from repro.core.projector import read_projector
+    from repro.core.subspace import proj_shape
     from repro.optim.factory import galore_state_index
 
     idx = galore_state_index(tc)
@@ -118,14 +126,63 @@ def _make_compressed_train_step(cfg, tc, rules, opt, loss_of):
                 ) if rules is not None else gv
                 if plan.galore:
                     # project per shard, THEN reduce (this mean is the DP
-                    # all-reduce — it now moves r×n, not m×n)
-                    return jnp.mean(_project(gv, P, plan), axis=0)
+                    # all-reduce — it now moves r×n, not m×n). P may be
+                    # stored quantized — dequant on read (gv carries a
+                    # leading virtual-shard dim; the weight shape is [1:])
+                    P32 = read_projector(
+                        P, proj_shape(jax.ShapeDtypeStruct(gv.shape[1:], gv.dtype), plan))
+                    return jnp.mean(_project(gv, P32, plan), axis=0)
                 return jnp.mean(gv.astype(jnp.float32), axis=0)
 
             grads_c = jax.tree_util.tree_map(fold, grads_vs, proj, plans)
             updates, opt_state2 = opt.update(grads_c, opt_state, params)
             params2 = apply_updates(params, updates)
             metrics = {"loss": jnp.mean(losses)}
+        return params2, opt_state2, metrics
+
+    return train_step
+
+
+def _make_fused_apply_train_step(cfg, tc, rules, opt, loss_of):
+    """W-in-place fast path (tc.galore_fused_apply): clip → one fused kernel
+    per galore leaf that folds projection, Adam, back-projection AND the
+    weight update W ← W + η·(G̃ + wd·W) into a single launch — the step never
+    materializes a full-size f32 update tree (the ROADMAP follow-up from the
+    fused-kernel PR). The optimizer state keeps the exact chain layout
+    (clip, galore, [wd], schedule), so checkpoints swap freely with the
+    two-step path, which remains the numerics oracle
+    (tests/test_quant.py::test_fused_apply_train_step_matches_chain)."""
+    from repro.core.galore import make_fused_apply
+    from repro.optim import schedules
+    from repro.optim.factory import effective_galore_config, galore_state_index
+    from repro.optim.transform import clip_by_global_norm
+
+    gcfg = effective_galore_config(tc)
+    assert gcfg is not None, "galore_fused_apply requires a GaLore config"
+    idx = galore_state_index(tc)
+    clip_transform = clip_by_global_norm(tc.grad_clip)
+    sched = schedules.warmup_cosine(tc.lr, tc.warmup_steps, tc.total_steps)
+    wd = tc.weight_decay if tc.optimizer == "adamw" else 0.0
+    apply_fn = make_fused_apply(
+        gcfg, b1=tc.b1, b2=tc.b2, eps=tc.eps, weight_decay=wd,
+        param_axes=M.param_axes(cfg),
+        external_refresh=tc.galore_external_refresh,
+    )
+
+    def train_step(params, opt_state, batch):
+        with sharding_context(rules):
+            (loss, metrics), grads = jax.value_and_grad(loss_of, has_aux=True)(
+                params, batch
+            )
+            if tc.grad_clip > 0:
+                # the chain's own clip transform (stateless) — single source
+                # of truth, so the oracle parity can never drift on clipping
+                grads, _ = clip_transform.update(grads, ())
+            count = opt_state[-1]["count"] + 1
+            eta = -sched(count)
+            params2, galore_state = apply_fn(params, grads, opt_state[idx], eta)
+            opt_state2 = (opt_state[:idx] + (galore_state,)
+                          + opt_state[idx + 1:-1] + ({"count": count},))
         return params2, opt_state2, metrics
 
     return train_step

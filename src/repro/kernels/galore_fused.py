@@ -56,6 +56,30 @@ produces out-of-bounds output columns, which Pallas discards.
 
 dtypes: P/G accept f32 or bf16; M/V must be f32 (they are the optimizer
 state of record); G̃/M'/V' are emitted f32, matching the unfused path.
+
+Quantized / weight-apply epilogues
+----------------------------------
+`_fused_epilogue_call` is a parametric builder over (side × int8-moments ×
+apply-weight) that generates the remaining six variants from one kernel
+body (the two fp32 emit kernels above predate it and are kept verbatim):
+
+  * int8 moments (`galore_fused_adam8_step[_right]`): M/V arrive as uint8
+    codes + per-block absmax in the axis-blocked layout of quant/codec.py
+    (blocks of QBLOCK=128 along the swept axis, so a tile covers whole
+    blocks). The kernel dequantizes in VMEM, runs the f32 Adam math, and
+    requantizes — fp32 moments NEVER touch HBM, which is the paper's 8-bit
+    GaLore configuration fused into the single-pass kernel. Codes and
+    scales are updated in place via input_output_aliases. Requantization
+    uses the branch-free midpoint-count search (as adam8bit_update.py);
+    ragged tails are masked to zero with an iota over the swept axis so a
+    partially-valid quantization block sees exactly the zero padding the
+    reference codec pads with.
+
+  * weight apply (`*_apply_step[_right]`): the kernel additionally reads a
+    W tile and emits W' = W + eta·(α P N̂ + wd·W) in W's dtype, aliased in
+    place — the full-size f32 update write disappears from the step
+    entirely (the launcher's lr/weight-decay chain is folded in via
+    eta = -lr). The two-step emit path remains the numerics oracle.
 """
 from __future__ import annotations
 
@@ -66,6 +90,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels.galore_project import _batch
+from repro.quant.codec import QBLOCK, dynamic_codebook
 
 DEFAULT_BN = 512
 VMEM_BUDGET = 12 * 1024 * 1024  # leave headroom out of ~16 MB/core
@@ -284,3 +309,315 @@ def galore_fused_adam_step_right(
         m_new.reshape(*lead, m, r),
         v_new.reshape(*lead, m, r),
     )
+
+
+# ---------------------------------------------------------------------------
+# Parametric epilogue variants: (side × int8-moments × weight-apply)
+# ---------------------------------------------------------------------------
+
+
+def _epilogue_kernel(*refs, side, quant, apply_w, w_dtype, b1, b2, eps,
+                     alpha, wd, long_dim, tile, qblock):
+    """One body for the six quantized / apply kernel variants.
+
+    Ref order (inputs):  P, G, [W], (Mq, Ms, Vq, Vs | M, V), count, [eta],
+                         [book_s, book_u, mids_s, mids_u]
+    Ref order (outputs): out, (Mq', Ms', Vq', Vs' | M', V')
+    All array blocks carry a leading batch dim of 1 (see module docstring).
+    eta (the folded -lr) is a runtime scalar operand — the schedule changes
+    it every step, so it cannot be baked into the kernel like b1/b2/eps.
+    """
+    it = iter(refs)
+    p_ref, g_ref = next(it), next(it)
+    w_ref = next(it) if apply_w else None
+    if quant:
+        mq_ref, ms_ref, vq_ref, vs_ref = next(it), next(it), next(it), next(it)
+    else:
+        m_ref, v_ref = next(it), next(it)
+    count_ref = next(it)
+    eta_ref = next(it) if apply_w else None
+    if quant:
+        book_s_ref, book_u_ref = next(it), next(it)
+        mids_s_ref, mids_u_ref = next(it), next(it)
+    out_ref = next(it)
+    if quant:
+        mq_out, ms_out, vq_out, vs_out = next(it), next(it), next(it), next(it)
+    else:
+        m_out, v_out = next(it), next(it)
+
+    def deq(codes, scales, book):
+        # axis-blocked dequant: blocks of `qblock` run along the swept axis
+        vals = book[codes.astype(jnp.int32)]
+        if side == "left":   # codes (r, bn), scales (r, bn//qblock)
+            r, bn = vals.shape
+            return (vals.reshape(r, bn // qblock, qblock)
+                    * scales[:, :, None]).reshape(r, bn)
+        bm, r = vals.shape   # right: codes (bm, r), scales (bm//qblock, r)
+        return (vals.reshape(bm // qblock, qblock, r)
+                * scales[:, None, :]).reshape(bm, r)
+
+    def req(x, mids):
+        # branch-free nearest-codebook search: count midpoints <= value
+        if side == "left":
+            r, bn = x.shape
+            xb = x.reshape(r, bn // qblock, qblock)
+            absmax = jnp.max(jnp.abs(xb), axis=2) + 1e-12
+            normed = xb / absmax[:, :, None]
+        else:
+            bm, r = x.shape
+            xb = x.reshape(bm // qblock, qblock, r)
+            absmax = jnp.max(jnp.abs(xb), axis=1) + 1e-12
+            normed = xb / absmax[:, None, :]
+        idx = jnp.sum(
+            normed[..., None] >= mids[None, None, None, :], axis=-1,
+            dtype=jnp.int32,
+        )
+        return idx.reshape(x.shape).astype(jnp.uint8), absmax
+
+    p = p_ref[0].astype(jnp.float32)
+    g = g_ref[0].astype(jnp.float32)
+    if side == "left":
+        # R = Pᵀ G (MXU, f32 accumulate): (r, bn)
+        R = jax.lax.dot_general(
+            p, g, dimension_numbers=(((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+    else:
+        # R = G P: (bm, r)
+        R = jax.lax.dot_general(
+            g, p, dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    if quant:
+        book_s, book_u = book_s_ref[...], book_u_ref[...]
+        m_old = deq(mq_ref[0], ms_ref[0], book_s)
+        v_old = deq(vq_ref[0], vs_ref[0], book_u)
+        # the last tile's padding beyond `long_dim` holds garbage (Pallas
+        # pads OOB input reads); zero the moments there so a boundary
+        # quantization block's absmax sees exactly the reference codec's
+        # zero padding
+        sweep_ax = 1 if side == "left" else 0
+        pos = (jax.lax.broadcasted_iota(jnp.int32, R.shape, sweep_ax)
+               + pl.program_id(1) * tile)
+        valid = pos < long_dim
+    else:
+        m_old, v_old = m_ref[0], v_ref[0]
+
+    m_new = b1 * m_old + (1.0 - b1) * R
+    v_new = b2 * v_old + (1.0 - b2) * R * R
+    if quant:
+        m_new = jnp.where(valid, m_new, 0.0)
+        v_new = jnp.where(valid, v_new, 0.0)
+    count = count_ref[0].astype(jnp.float32)
+    c1 = 1.0 - b1 ** count
+    c2 = 1.0 - b2 ** count
+    n_hat = (m_new / c1) / (jnp.sqrt(v_new / c2) + eps)
+
+    if side == "left":
+        gt = alpha * jax.lax.dot_general(
+            p, n_hat, dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+    else:
+        gt = alpha * jax.lax.dot_general(
+            n_hat, p, dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+    if apply_w:
+        w = w_ref[0].astype(jnp.float32)
+        out_ref[0] = (w + eta_ref[0] * (gt + wd * w)).astype(w_dtype)
+    else:
+        out_ref[0] = gt
+
+    if quant:
+        mq, ms = req(m_new, mids_s_ref[...])
+        vq, vs = req(v_new, mids_u_ref[...])
+        mq_out[0], ms_out[0] = mq, ms
+        vq_out[0], vs_out[0] = vq, vs
+    else:
+        m_out[0], v_out[0] = m_new, v_new
+
+
+def _fused_epilogue_call(side, quant, apply_w, P, G, W, moments, count, *,
+                         b1, b2, eps, alpha, eta, wd, tile0, interpret):
+    """Build + launch one epilogue-variant pallas_call. `moments` is
+    (Mq, Ms, Vq, Vs) when quant else (M, V); returns (out, *new_moments)."""
+    m, n = G.shape[-2:]
+    r = P.shape[-1]
+    short, long_dim = (m, n) if side == "left" else (n, m)
+    assert P.shape[-2] == short, (P.shape, G.shape)
+    mom_shape = (r, n) if side == "left" else (m, r)
+    if quant:
+        Mq, Ms, Vq, Vs = moments
+        nb_total = -(-long_dim // QBLOCK)
+        scale_shape = (r, nb_total) if side == "left" else (nb_total, r)
+        assert Mq.shape[-2:] == mom_shape and Vq.shape[-2:] == mom_shape, (
+            Mq.shape, Vq.shape, mom_shape)
+        assert Ms.shape[-2:] == scale_shape and Vs.shape[-2:] == scale_shape, (
+            Ms.shape, Vs.shape, scale_shape)
+        assert Mq.dtype == jnp.uint8 and Vq.dtype == jnp.uint8
+    else:
+        M, V = moments
+        assert M.shape[-2:] == mom_shape and V.shape[-2:] == mom_shape, (
+            M.shape, V.shape, mom_shape)
+        assert M.dtype == jnp.float32 and V.dtype == jnp.float32
+
+    batched = [_batch(x) for x in (P, G) + tuple(moments)
+               + ((W,) if apply_w else ())]
+    lead = batched[0][1]
+    assert all(b[1] == lead for b in batched), [x.shape for x in (P, G)]
+    arrs = [b[0] for b in batched]
+    Pb, Gb = arrs[0], arrs[1]
+    mom_b = arrs[2:2 + len(moments)]
+    Wb = arrs[-1] if apply_w else None
+    L = Gb.shape[0]
+
+    tile = _pick_bn(short, r, long_dim, Gb.dtype.itemsize, tile0)
+    if quant:
+        # a tile must cover whole quantization blocks (the scale tile is the
+        # code tile's blocked axis divided by QBLOCK)
+        tile = -(-tile // QBLOCK) * QBLOCK
+    nbt = tile // QBLOCK
+    grid = (L, pl.cdiv(long_dim, tile))
+
+    # blockspecs: the short + rank dims are spanned whole; only the long
+    # axis is swept (column tiles on the left, row tiles on the right)
+    p_spec = pl.BlockSpec((1, short, r), lambda l, j: (l, 0, 0))
+    if side == "left":
+        g_spec = pl.BlockSpec((1, m, tile), lambda l, j: (l, 0, j))
+        code_spec = pl.BlockSpec((1, r, tile), lambda l, j: (l, 0, j))
+        scale_spec = pl.BlockSpec((1, r, nbt), lambda l, j: (l, 0, j))
+        mom_spec = pl.BlockSpec((1, r, tile), lambda l, j: (l, 0, j))
+    else:
+        g_spec = pl.BlockSpec((1, tile, n), lambda l, j: (l, j, 0))
+        code_spec = pl.BlockSpec((1, tile, r), lambda l, j: (l, j, 0))
+        scale_spec = pl.BlockSpec((1, nbt, r), lambda l, j: (l, j, 0))
+        mom_spec = pl.BlockSpec((1, tile, r), lambda l, j: (l, j, 0))
+    rep = lambda l, j: (0,)
+
+    in_specs = [p_spec, g_spec]
+    operands = [Pb, Gb]
+    if apply_w:
+        in_specs.append(g_spec)
+        operands.append(Wb)
+    if quant:
+        in_specs += [code_spec, scale_spec, code_spec, scale_spec]
+    else:
+        in_specs += [mom_spec, mom_spec]
+    operands += mom_b
+    in_specs.append(pl.BlockSpec((1,), rep))
+    operands.append(count.reshape(1))
+    if apply_w:
+        in_specs.append(pl.BlockSpec((1,), rep))
+        operands.append(jnp.asarray(eta, jnp.float32).reshape(1))
+    if quant:
+        book_s = jnp.asarray(dynamic_codebook(True))
+        book_u = jnp.asarray(dynamic_codebook(False))
+        mids_s = (book_s[:-1] + book_s[1:]) / 2.0
+        mids_u = (book_u[:-1] + book_u[1:]) / 2.0
+        in_specs += [pl.BlockSpec((256,), rep), pl.BlockSpec((256,), rep),
+                     pl.BlockSpec((255,), rep), pl.BlockSpec((255,), rep)]
+        operands += [book_s, book_u, mids_s, mids_u]
+
+    out_dtype = W.dtype if apply_w else jnp.float32
+    out_shapes = [jax.ShapeDtypeStruct((L, m, n), out_dtype)]
+    out_specs = [g_spec]
+    if quant:
+        full_scale = (L,) + ((r, nb_total) if side == "left" else (nb_total, r))
+        full_codes = (L,) + mom_shape
+        out_shapes += [jax.ShapeDtypeStruct(full_codes, jnp.uint8),
+                       jax.ShapeDtypeStruct(full_scale, jnp.float32),
+                       jax.ShapeDtypeStruct(full_codes, jnp.uint8),
+                       jax.ShapeDtypeStruct(full_scale, jnp.float32)]
+        out_specs += [code_spec, scale_spec, code_spec, scale_spec]
+    else:
+        out_shapes += [jax.ShapeDtypeStruct((L,) + mom_shape, jnp.float32)] * 2
+        out_specs += [mom_spec, mom_spec]
+
+    # moments (and W, when applying) are donated and updated in place
+    mom_in_base = 3 if apply_w else 2
+    aliases = {mom_in_base + i: 1 + i for i in range(len(moments))}
+    if apply_w:
+        aliases[2] = 0  # W → W'
+
+    kernel = functools.partial(
+        _epilogue_kernel, side=side, quant=quant, apply_w=apply_w,
+        w_dtype=out_dtype, b1=b1, b2=b2, eps=eps, alpha=alpha,
+        wd=wd, long_dim=long_dim, tile=tile, qblock=QBLOCK,
+    )
+    outs = pl.pallas_call(
+        kernel, grid=grid, in_specs=in_specs, out_specs=tuple(out_specs),
+        out_shape=tuple(out_shapes), input_output_aliases=aliases,
+        interpret=interpret,
+    )(*operands)
+    restore = lambda x: x.reshape(*lead, *x.shape[1:])
+    return tuple(restore(o) for o in outs)
+
+
+def galore_fused_adam8_step(P, G, Mq, Ms, Vq, Vs, count, *, b1=0.9, b2=0.999,
+                            eps=1e-8, alpha=1.0, bn=DEFAULT_BN,
+                            interpret: bool = False):
+    """Fused left-side GaLore step with INT8 moments: R = PᵀG → dequant M/V →
+    Adam → requant → G̃ = α P N̂. Codes/scales use the axis-blocked layout
+    (quant/codec.py, blocks along n); all four moment arrays are updated in
+    place. Returns (G̃ f32, Mq', Ms', Vq', Vs')."""
+    return _fused_epilogue_call(
+        "left", True, False, P, G, None, (Mq, Ms, Vq, Vs), count,
+        b1=b1, b2=b2, eps=eps, alpha=alpha, eta=0.0, wd=0.0, tile0=bn,
+        interpret=interpret)
+
+
+def galore_fused_adam8_step_right(P, G, Mq, Ms, Vq, Vs, count, *, b1=0.9,
+                                  b2=0.999, eps=1e-8, alpha=1.0, bm=DEFAULT_BN,
+                                  interpret: bool = False):
+    """Right-side INT8-moment variant: R = G P → Adam → G̃ = α N̂ Pᵀ, blocks
+    along the swept m axis."""
+    return _fused_epilogue_call(
+        "right", True, False, P, G, None, (Mq, Ms, Vq, Vs), count,
+        b1=b1, b2=b2, eps=eps, alpha=alpha, eta=0.0, wd=0.0, tile0=bm,
+        interpret=interpret)
+
+
+def galore_fused_adam_apply_step(P, G, W, M, V, count, *, b1=0.9, b2=0.999,
+                                 eps=1e-8, alpha=1.0, eta=-1e-3, wd=0.0,
+                                 bn=DEFAULT_BN, interpret: bool = False):
+    """Left-side fused step with the weight update folded in:
+    W' = W + eta·(α P N̂ + wd·W), emitted in W's dtype and aliased in place —
+    no full-size f32 G̃ write. Returns (W', M', V')."""
+    return _fused_epilogue_call(
+        "left", False, True, P, G, W, (M, V), count,
+        b1=b1, b2=b2, eps=eps, alpha=alpha, eta=eta, wd=wd, tile0=bn,
+        interpret=interpret)
+
+
+def galore_fused_adam_apply_step_right(P, G, W, M, V, count, *, b1=0.9,
+                                       b2=0.999, eps=1e-8, alpha=1.0,
+                                       eta=-1e-3, wd=0.0, bm=DEFAULT_BN,
+                                       interpret: bool = False):
+    return _fused_epilogue_call(
+        "right", False, True, P, G, W, (M, V), count,
+        b1=b1, b2=b2, eps=eps, alpha=alpha, eta=eta, wd=wd, tile0=bm,
+        interpret=interpret)
+
+
+def galore_fused_adam8_apply_step(P, G, W, Mq, Ms, Vq, Vs, count, *, b1=0.9,
+                                  b2=0.999, eps=1e-8, alpha=1.0, eta=-1e-3,
+                                  wd=0.0, bn=DEFAULT_BN,
+                                  interpret: bool = False):
+    """INT8 moments AND in-place weight apply: the full 8-bit GaLore hot
+    path — HBM sees P, G, W and the uint8 codes; nothing else."""
+    return _fused_epilogue_call(
+        "left", True, True, P, G, W, (Mq, Ms, Vq, Vs), count,
+        b1=b1, b2=b2, eps=eps, alpha=alpha, eta=eta, wd=wd, tile0=bn,
+        interpret=interpret)
+
+
+def galore_fused_adam8_apply_step_right(P, G, W, Mq, Ms, Vq, Vs, count, *,
+                                        b1=0.9, b2=0.999, eps=1e-8, alpha=1.0,
+                                        eta=-1e-3, wd=0.0, bm=DEFAULT_BN,
+                                        interpret: bool = False):
+    return _fused_epilogue_call(
+        "right", True, True, P, G, W, (Mq, Ms, Vq, Vs), count,
+        b1=b1, b2=b2, eps=eps, alpha=alpha, eta=eta, wd=wd, tile0=bm,
+        interpret=interpret)

@@ -88,6 +88,100 @@ def galore_fused_adam_step_right(P, G, M, V, count, *, b1=0.9, b2=0.999,
     return ref.galore_fused_adam_step_right(P, G, M, V, count, b1, b2, eps, alpha)
 
 
+def galore_fused_adam8_step(P, G, Mq, Ms, Vq, Vs, count, *, b1=0.9, b2=0.999,
+                            eps=1e-8, alpha=1.0, use_pallas=None,
+                            interpret=False):
+    """INT8-moment fused leaf update (left side): R = PᵀG → dequant M/V in
+    VMEM → Adam → requant → G̃ = α P N̂. Codes and scales are updated in
+    place; fp32 moments never touch HBM. Returns (G̃, Mq', Ms', Vq', Vs').
+
+    Falls back to the reference composition when the fused VMEM budget
+    rejects the shape (the dequantized tiles are bounded by the same f32
+    footprint `_pick_bn` budgets for)."""
+    if _resolve(use_pallas):
+        m, n = G.shape[-2:]
+        if galore_fused_k.fits_vmem(m, P.shape[-1], n, G.dtype.itemsize):
+            return galore_fused_k.galore_fused_adam8_step(
+                P, G, Mq, Ms, Vq, Vs, count, b1=b1, b2=b2, eps=eps,
+                alpha=alpha, interpret=interpret)
+    return ref.galore_fused_adam8_step(P, G, Mq, Ms, Vq, Vs, count,
+                                       b1, b2, eps, alpha)
+
+
+def galore_fused_adam8_step_right(P, G, Mq, Ms, Vq, Vs, count, *, b1=0.9,
+                                  b2=0.999, eps=1e-8, alpha=1.0,
+                                  use_pallas=None, interpret=False):
+    """Right-side INT8-moment fused leaf update (blocks along the swept m)."""
+    if _resolve(use_pallas):
+        m, n = G.shape[-2:]
+        if galore_fused_k.fits_vmem(n, P.shape[-1], m, G.dtype.itemsize):
+            return galore_fused_k.galore_fused_adam8_step_right(
+                P, G, Mq, Ms, Vq, Vs, count, b1=b1, b2=b2, eps=eps,
+                alpha=alpha, interpret=interpret)
+    return ref.galore_fused_adam8_step_right(P, G, Mq, Ms, Vq, Vs, count,
+                                             b1, b2, eps, alpha)
+
+
+def galore_fused_adam_apply_step(P, G, W, M, V, count, *, b1=0.9, b2=0.999,
+                                 eps=1e-8, alpha=1.0, eta=-1e-3, wd=0.0,
+                                 use_pallas=None, interpret=False):
+    """Weight-apply fused leaf update: W' = W + eta·(α P N̂ + wd·W) with W
+    aliased in place — the remaining full-size f32 update write is gone.
+    Returns (W', M', V'); the emit + chain path is the numerics oracle."""
+    if _resolve(use_pallas):
+        m, n = G.shape[-2:]
+        if galore_fused_k.fits_vmem(m, P.shape[-1], n, G.dtype.itemsize):
+            return galore_fused_k.galore_fused_adam_apply_step(
+                P, G, W, M, V, count, b1=b1, b2=b2, eps=eps, alpha=alpha,
+                eta=eta, wd=wd, interpret=interpret)
+    return ref.galore_fused_adam_apply_step(P, G, W, M, V, count, b1, b2, eps,
+                                            alpha, eta, wd)
+
+
+def galore_fused_adam_apply_step_right(P, G, W, M, V, count, *, b1=0.9,
+                                       b2=0.999, eps=1e-8, alpha=1.0,
+                                       eta=-1e-3, wd=0.0, use_pallas=None,
+                                       interpret=False):
+    if _resolve(use_pallas):
+        m, n = G.shape[-2:]
+        if galore_fused_k.fits_vmem(n, P.shape[-1], m, G.dtype.itemsize):
+            return galore_fused_k.galore_fused_adam_apply_step_right(
+                P, G, W, M, V, count, b1=b1, b2=b2, eps=eps, alpha=alpha,
+                eta=eta, wd=wd, interpret=interpret)
+    return ref.galore_fused_adam_apply_step_right(P, G, W, M, V, count, b1, b2,
+                                                  eps, alpha, eta, wd)
+
+
+def galore_fused_adam8_apply_step(P, G, W, Mq, Ms, Vq, Vs, count, *, b1=0.9,
+                                  b2=0.999, eps=1e-8, alpha=1.0, eta=-1e-3,
+                                  wd=0.0, use_pallas=None, interpret=False):
+    """INT8 moments + in-place weight apply — the full 8-bit GaLore hot path
+    in one launch (HBM sees P, G, W and uint8 codes only)."""
+    if _resolve(use_pallas):
+        m, n = G.shape[-2:]
+        if galore_fused_k.fits_vmem(m, P.shape[-1], n, G.dtype.itemsize):
+            return galore_fused_k.galore_fused_adam8_apply_step(
+                P, G, W, Mq, Ms, Vq, Vs, count, b1=b1, b2=b2, eps=eps,
+                alpha=alpha, eta=eta, wd=wd, interpret=interpret)
+    return ref.galore_fused_adam8_apply_step(P, G, W, Mq, Ms, Vq, Vs, count,
+                                             b1, b2, eps, alpha, eta, wd)
+
+
+def galore_fused_adam8_apply_step_right(P, G, W, Mq, Ms, Vq, Vs, count, *,
+                                        b1=0.9, b2=0.999, eps=1e-8, alpha=1.0,
+                                        eta=-1e-3, wd=0.0, use_pallas=None,
+                                        interpret=False):
+    if _resolve(use_pallas):
+        m, n = G.shape[-2:]
+        if galore_fused_k.fits_vmem(n, P.shape[-1], m, G.dtype.itemsize):
+            return galore_fused_k.galore_fused_adam8_apply_step_right(
+                P, G, W, Mq, Ms, Vq, Vs, count, b1=b1, b2=b2, eps=eps,
+                alpha=alpha, eta=eta, wd=wd, interpret=interpret)
+    return ref.galore_fused_adam8_apply_step_right(P, G, W, Mq, Ms, Vq, Vs,
+                                                   count, b1, b2, eps, alpha,
+                                                   eta, wd)
+
+
 def adam8bit_step(g_blocks, m_codes, m_scale, v_codes, v_scale, count,
                   *, b1=0.9, b2=0.999, eps=1e-8, use_pallas=None, interpret=False):
     """Fused dequant→Adam→requant on (nb, 256) blocks."""

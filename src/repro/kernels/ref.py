@@ -72,6 +72,77 @@ def galore_fused_adam_step_right(P, G, M, V, count, b1=0.9, b2=0.999, eps=1e-8,
     return galore_project_back_right(P, N_t, alpha), M_t, V_t
 
 
+def galore_fused_adam8_step(P, G, Mq, Ms, Vq, Vs, count, b1=0.9, b2=0.999,
+                            eps=1e-8, alpha=1.0):
+    """Oracle for the INT8-moment fused epilogue (left side).
+
+    M/V arrive as axis-blocked codes + scales (quant/codec.py: blocks of
+    QBLOCK along n). Exactly the composition project → dequant → Adam →
+    requant → back-project the kernel performs in one VMEM pass; code-level
+    agreement is within 1 ulp of the codebook (searchsorted vs the kernel's
+    midpoint-count rule differ only on exact midpoint hits)."""
+    from repro.quant import codec
+
+    R = galore_project(P, G)
+    m = codec.dequantize_axis(Mq, Ms, axis=-1, signed=True)
+    v = codec.dequantize_axis(Vq, Vs, axis=-1, signed=False)
+    N_t, M_t, V_t = lowrank_adam_update(R, m, v, count, b1, b2, eps)
+    out = galore_project_back(P, N_t, alpha)
+    mq, ms = codec.quantize_axis(M_t, axis=-1, signed=True)
+    vq, vs = codec.quantize_axis(V_t, axis=-1, signed=False)
+    return out, mq, ms, vq, vs
+
+
+def galore_fused_adam8_step_right(P, G, Mq, Ms, Vq, Vs, count, b1=0.9,
+                                  b2=0.999, eps=1e-8, alpha=1.0):
+    """Right-side INT8-moment oracle: blocks run along the swept m axis."""
+    from repro.quant import codec
+
+    R = galore_project_right(P, G)
+    m = codec.dequantize_axis(Mq, Ms, axis=-2, signed=True)
+    v = codec.dequantize_axis(Vq, Vs, axis=-2, signed=False)
+    N_t, M_t, V_t = lowrank_adam_update(R, m, v, count, b1, b2, eps)
+    out = galore_project_back_right(P, N_t, alpha)
+    mq, ms = codec.quantize_axis(M_t, axis=-2, signed=True)
+    vq, vs = codec.quantize_axis(V_t, axis=-2, signed=False)
+    return out, mq, ms, vq, vs
+
+
+def _apply_weight(W, gt, eta, wd):
+    w32 = W.astype(jnp.float32)
+    return (w32 + eta * (gt + wd * w32)).astype(W.dtype)
+
+
+def galore_fused_adam_apply_step(P, G, W, M, V, count, b1=0.9, b2=0.999,
+                                 eps=1e-8, alpha=1.0, eta=-1e-3, wd=0.0):
+    """Weight-apply oracle: the emit-path composition followed by the chain's
+    decay/lr application, W' = W + eta·(α P N̂ + wd·W)."""
+    gt, M_t, V_t = galore_fused_adam_step(P, G, M, V, count, b1, b2, eps, alpha)
+    return _apply_weight(W, gt, eta, wd), M_t, V_t
+
+
+def galore_fused_adam_apply_step_right(P, G, W, M, V, count, b1=0.9, b2=0.999,
+                                       eps=1e-8, alpha=1.0, eta=-1e-3, wd=0.0):
+    gt, M_t, V_t = galore_fused_adam_step_right(P, G, M, V, count, b1, b2, eps,
+                                                alpha)
+    return _apply_weight(W, gt, eta, wd), M_t, V_t
+
+
+def galore_fused_adam8_apply_step(P, G, W, Mq, Ms, Vq, Vs, count, b1=0.9,
+                                  b2=0.999, eps=1e-8, alpha=1.0, eta=-1e-3,
+                                  wd=0.0):
+    out = galore_fused_adam8_step(P, G, Mq, Ms, Vq, Vs, count, b1, b2, eps, alpha)
+    return (_apply_weight(W, out[0], eta, wd),) + out[1:]
+
+
+def galore_fused_adam8_apply_step_right(P, G, W, Mq, Ms, Vq, Vs, count, b1=0.9,
+                                        b2=0.999, eps=1e-8, alpha=1.0,
+                                        eta=-1e-3, wd=0.0):
+    out = galore_fused_adam8_step_right(P, G, Mq, Ms, Vq, Vs, count, b1, b2,
+                                        eps, alpha)
+    return (_apply_weight(W, out[0], eta, wd),) + out[1:]
+
+
 def quantize_blocks(x_blocks: jnp.ndarray, book: jnp.ndarray):
     """x (nb, BLOCK) f32 -> (codes u8, absmax f32 (nb,)). book sorted (256,)."""
     absmax = jnp.max(jnp.abs(x_blocks), axis=1) + 1e-12

@@ -61,16 +61,23 @@ def default_microbatch(cfg) -> int:
 
 def default_train_config(cfg, optimizer: str = "adamw", galore: bool = True,
                          microbatch: int | None = None, rank_frac: float = 0.0,
-                         adaptive_t: bool = False, stagger: bool = False) -> TrainConfig:
+                         adaptive_t: bool = False, stagger: bool = False,
+                         quant_moments: str = "fp32",
+                         quant_proj: str = "fp32") -> TrainConfig:
     """Paper-faithful defaults: GaLore rank ≈ d_model/4 (Table 2), T=200, α=0.25.
 
     rank_frac / adaptive_t / stagger opt into the subspace-lifecycle policies
-    (core/subspace.py) so their sharded state + refresh lowering can be
-    dry-run audited per arch like everything else."""
+    (core/subspace.py), quant_moments / quant_proj into the quantized-state
+    policies (src/repro/quant/), so their sharded state + refresh lowering
+    can be dry-run audited per arch like everything else."""
+    from repro.quant import QuantPolicy
+
     rank = max(128, (cfg.d_model // 4) // 128 * 128)
     g = GaLoreConfig(rank=rank, update_freq=200, scale=0.25, projector="newton_schulz",
                      rank_frac=rank_frac, adaptive_t=adaptive_t,
-                     refresh_stagger=stagger) if galore else None
+                     refresh_stagger=stagger,
+                     quant=QuantPolicy(moments=quant_moments,
+                                       projectors=quant_proj)) if galore else None
     mb = default_microbatch(cfg) if microbatch is None else microbatch
     return TrainConfig(optimizer=optimizer, galore=g, grad_clip=1.0, weight_decay=0.0,
                        microbatch=mb, galore_external_refresh=True)
@@ -125,6 +132,8 @@ def run_cell(
     rank_frac: float = 0.0,
     adaptive_t: bool = False,
     stagger: bool = False,
+    quant_moments: str = "fp32",
+    quant_proj: str = "fp32",
 ) -> dict:
     cfg = get_config(arch)
     ok, reason = cfg.supports_shape(shape_name)
@@ -144,7 +153,8 @@ def run_cell(
     long_ctx = shape_name == "long_500k"
     rules = rules_variant(mesh, rules_name, long_context=long_ctx)
     tc = default_train_config(cfg, optimizer, galore, rank_frac=rank_frac,
-                              adaptive_t=adaptive_t, stagger=stagger)
+                              adaptive_t=adaptive_t, stagger=stagger,
+                              quant_moments=quant_moments, quant_proj=quant_proj)
 
     t0 = time.time()
     compiled = lower_cell(cfg, shape_name, mesh, rules, tc)
@@ -267,6 +277,10 @@ def main():
                     help="adaptive per-leaf refresh period (adds schedule state)")
     ap.add_argument("--stagger", action="store_true",
                     help="staggered per-leaf projector refresh offsets")
+    ap.add_argument("--quant-moments", choices=["fp32", "int8"], default="fp32",
+                    help="Adam moment storage (8-bit GaLore state layout)")
+    ap.add_argument("--quant-proj", choices=["fp32", "bf16", "int4"],
+                    default="fp32", help="persistent projector storage")
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--skip-scaling", action="store_true")
     args = ap.parse_args()
@@ -296,6 +310,8 @@ def main():
                         skip_scaling=args.skip_scaling or multi,
                         rank_frac=args.rank_frac, adaptive_t=args.adaptive_t,
                         stagger=args.stagger,
+                        quant_moments=args.quant_moments,
+                        quant_proj=args.quant_proj,
                     )
                 except Exception as e:  # noqa: BLE001 — record the failure, keep going
                     rec = {

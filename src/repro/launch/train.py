@@ -119,26 +119,47 @@ def main():
                     help="overlap-gated per-leaf refresh period (Q-GaLore-style)")
     ap.add_argument("--galore-stagger", action="store_true",
                     help="stagger per-leaf projector refreshes across the window")
+    ap.add_argument("--galore-fused-apply", action="store_true",
+                    help="fold the weight update into the fused-kernel "
+                         "epilogue (requires --galore-fused)")
+    ap.add_argument("--quant-moments", choices=["fp32", "int8"], default="fp32",
+                    help="Adam moment storage (int8 = blockwise dynamic codes "
+                         "+ per-block absmax; the paper's 8-bit GaLore)")
+    ap.add_argument("--quant-proj", choices=["fp32", "bf16", "int4"],
+                    default="fp32",
+                    help="persistent projector storage (int4 = packed "
+                         "Q-GaLore format, dequantized on read)")
+    ap.add_argument("--quant-lazy-refresh", action="store_true",
+                    help="int4 projectors: skip committing refreshes that "
+                         "leave the quantized codes unchanged")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     args = ap.parse_args()
 
+    from repro.quant import QuantPolicy
+
     galore = (
         GaLoreConfig(rank=args.galore_rank, update_freq=args.galore_t,
                      rank_frac=args.galore_rank_frac,
                      adaptive_t=args.galore_adaptive_t,
-                     refresh_stagger=args.galore_stagger)
+                     refresh_stagger=args.galore_stagger,
+                     quant=QuantPolicy(moments=args.quant_moments,
+                                       projectors=args.quant_proj,
+                                       lazy_refresh=args.quant_lazy_refresh))
         if args.galore_rank > 0 or args.galore_rank_frac > 0
         else None
     )
     if args.galore_fused and galore is None:
         ap.error("--galore-fused requires --galore-rank or --galore-rank-frac > 0")
+    if args.galore_fused_apply and not args.galore_fused:
+        ap.error("--galore-fused-apply requires --galore-fused")
     tc = TrainConfig(
         optimizer=args.optimizer, galore=galore, lr=args.lr, total_steps=args.steps,
         warmup_steps=max(1, args.steps // 10),
         galore_fused_adam=args.galore_fused,
+        galore_fused_apply=args.galore_fused_apply,
     )
     run = RunConfig(
         arch=args.arch, smoke=not args.full, steps=args.steps,

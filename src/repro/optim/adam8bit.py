@@ -5,7 +5,20 @@ per element vs 4 bytes for fp32 Adam). The update dequantizes, performs the
 fp32 Adam math, and requantizes — exactly the sequence the fused Pallas
 kernel (kernels/adam8bit_kernel.py) performs in one VMEM pass on TPU.
 
-Small leaves (< min_quant_size elems) stay fp32, as in bitsandbytes.
+Small leaves (< min_quant_size elems) stay fp32, as in bitsandbytes. The
+quantize-or-not decision is made ONCE, at init, and `update` reads it back
+from the state structure — the two can never disagree (previously `update`
+re-derived it from the gradient's size, which breaks the moment a state is
+restored from a checkpoint written under a different min_quant_size).
+
+GaLore composition: `galore(scale_by_adam8bit(...))` is no longer how 8-bit
+GaLore is built — optim/factory.py routes `optimizer="adam8bit"` + galore
+through the plan-aware quantized-moment subsystem (GaLoreConfig.quant,
+src/repro/quant/), which applies min_quant_size to the WEIGHT's element
+count. Under the old composition the inner transform only ever saw the
+compact (r, n) moments, so a large weight whose r·n dipped under the
+threshold silently lost quantization. This module remains the standalone
+(non-GaLore) 8-bit Adam.
 """
 from __future__ import annotations
 
@@ -14,17 +27,13 @@ import jax.numpy as jnp
 
 from repro.optim import quant8
 from repro.optim.transform import GradientTransformation
-
-MIN_QUANT_SIZE = 4096
+from repro.quant.policy import MIN_QUANT_SIZE
 
 
 def scale_by_adam8bit(b1=0.9, b2=0.999, eps=1e-8, min_quant_size=MIN_QUANT_SIZE) -> GradientTransformation:
-    def is_quantized(p):
-        return p.size >= min_quant_size
-
     def init(params):
         def per_leaf(p):
-            if is_quantized(p):
+            if p.size >= min_quant_size:
                 zeros = jnp.zeros(p.shape, jnp.float32)
                 return {
                     "m": quant8.quant_state(zeros, signed=True),
@@ -47,7 +56,9 @@ def scale_by_adam8bit(b1=0.9, b2=0.999, eps=1e-8, min_quant_size=MIN_QUANT_SIZE)
 
         def per_leaf(g, mv):
             g32 = g.astype(jnp.float32)
-            if is_quantized(g):
+            # the state structure IS the quantization decision (made at init)
+            quantized = isinstance(mv["m"], dict)
+            if quantized:
                 m = quant8.dequant_state(mv["m"], g.shape, signed=True)
                 v = quant8.dequant_state(mv["v"], g.shape, signed=False)
             else:
@@ -55,7 +66,7 @@ def scale_by_adam8bit(b1=0.9, b2=0.999, eps=1e-8, min_quant_size=MIN_QUANT_SIZE)
             m = b1 * m + (1 - b1) * g32
             v = b2 * v + (1 - b2) * jnp.square(g32)
             upd = ((m / c1) / (jnp.sqrt(v / c2) + eps)).astype(g.dtype)
-            if is_quantized(g):
+            if quantized:
                 new_mv = {
                     "m": quant8.quant_state(m, signed=True),
                     "v": quant8.quant_state(v, signed=False),

@@ -4,10 +4,22 @@ Pipeline (paper-faithful ordering):
     clip_by_global_norm -> [galore(inner)] -> add_decayed_weights -> -lr schedule
 GaLore wraps only the statistics transform (Adam/Adafactor/8-bit Adam); weight
 decay and LR scaling act on full-shape updates, as in the reference impl.
+
+8-bit GaLore routing: `optimizer="adam8bit"` + galore no longer nests the
+flat-blockwise adam8bit transform inside the projection (which compared
+min_quant_size against the COMPACT moment size, silently de-quantizing large
+weights — see quant/policy.py). It routes through the plan-aware quantized-
+moment subsystem instead: galore manages int8 compact moments for projected
+leaves and int8 full-shape moments for passthrough leaves (embeddings), with
+the min_quant_size floor applied to the WEIGHT's element count everywhere.
+`effective_galore_config` exposes the routed config so state-sharding axes
+and memory accounting derive from the same source of truth.
 """
 from __future__ import annotations
 
-from repro.configs.base import TrainConfig
+import dataclasses
+
+from repro.configs.base import GaLoreConfig, TrainConfig
 from repro.core.galore import galore
 from repro.optim import schedules
 from repro.optim.adafactor import scale_by_adafactor
@@ -21,6 +33,20 @@ from repro.optim.transform import (
     scale_by_schedule,
     trace,
 )
+
+_ADAM_SHAPED = ("adam", "adamw", "adam8bit")
+
+
+def effective_galore_config(tc: TrainConfig) -> GaLoreConfig | None:
+    """tc.galore with the adam8bit composition routed through QuantPolicy
+    (moments forced to int8 when the policy left them fp32)."""
+    if tc.galore is None:
+        return None
+    g = tc.galore
+    if tc.optimizer == "adam8bit" and g.quant.moments == "fp32":
+        g = dataclasses.replace(
+            g, quant=dataclasses.replace(g.quant, moments="int8"))
+    return g
 
 
 def _stats_transform(tc: TrainConfig) -> GradientTransformation:
@@ -41,19 +67,34 @@ def galore_state_index(tc: TrainConfig) -> int:
 
 
 def build_optimizer(tc: TrainConfig, param_axes=None) -> GradientTransformation:
-    stats = _stats_transform(tc)
-    if tc.galore is not None:
-        if tc.galore_fused_adam and tc.optimizer not in ("adam", "adamw"):
+    gcfg = effective_galore_config(tc)
+    if gcfg is not None:
+        if tc.galore_fused_adam and tc.optimizer not in _ADAM_SHAPED:
             raise ValueError(
-                f"galore_fused_adam requires a plain Adam inner optimizer, "
+                f"galore_fused_adam requires an Adam-shaped inner optimizer, "
                 f"got {tc.optimizer!r}"
             )
-        stats = galore(stats, tc.galore, param_axes=param_axes,
+        if gcfg.quant.quantizes_moments and tc.optimizer not in _ADAM_SHAPED:
+            raise ValueError(
+                f"quantized moments require an Adam-shaped inner optimizer "
+                f"(galore manages the Adam math itself), got {tc.optimizer!r}"
+            )
+        if tc.galore_fused_apply and not tc.galore_fused_adam:
+            raise ValueError("galore_fused_apply requires galore_fused_adam")
+        if tc.optimizer == "adam8bit":
+            # quantization is handled by the galore-managed subsystem; the
+            # inner transform only defines the Adam hyperparameters
+            stats = scale_by_adam(tc.b1, tc.b2, tc.eps)
+        else:
+            stats = _stats_transform(tc)
+        stats = galore(stats, gcfg, param_axes=param_axes,
                        external_refresh=tc.galore_external_refresh,
                        pre_projected=tc.galore_dp_compress,
                        fused_adam=tc.galore_fused_adam,
                        b1=tc.b1, b2=tc.b2, eps=tc.eps,
                        seed=tc.seed)
+    else:
+        stats = _stats_transform(tc)
     parts = []
     if tc.grad_clip > 0:
         parts.append(clip_by_global_norm(tc.grad_clip))

@@ -1,84 +1,20 @@
-"""Blockwise 8-bit quantization with a dynamic-exponent codebook.
+"""Compatibility shim — the blockwise codecs moved to repro.quant.codec.
 
-Follows Dettmers et al. (2022): values are normalized per block by absmax,
-then rounded to the nearest entry of a 256-value dynamic map (sign ×
-power-of-10 exponent × linear fraction). Signed map for Adam's first moment,
-unsigned map for the (non-negative) second moment.
-
-This module is also the numerical oracle for kernels/quant8_kernel.py.
+The quantized-optimizer-state subsystem (src/repro/quant/) now owns every
+low-precision codec: the dynamic-exponent INT8 blocks that used to live
+here, the packed INT4 projector format, and the axis-blocked layout the
+fused GaLore kernels consume. This module re-exports the original INT8 API
+so existing imports (optim/adam8bit.py, kernels/, tests) keep working; new
+code should import repro.quant directly.
 """
-from __future__ import annotations
+from repro.quant.codec import (  # noqa: F401
+    BLOCK,
+    dequant_state,
+    dequantize,
+    dynamic_codebook,
+    quant_state,
+    quantize,
+)
 
-import functools
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-BLOCK = 256
-
-
-@functools.lru_cache(maxsize=None)
-def dynamic_codebook(signed: bool = True) -> np.ndarray:
-    """256 sorted codebook values in [-1, 1] (signed) or [0, 1] (unsigned)."""
-    total_bits = 8
-    sign_bits = 1 if signed else 0
-    non_sign_bits = total_bits - sign_bits
-    max_exp_bits = non_sign_bits - 1  # reserve indicator bit layout
-    data = [0.0]
-    for e in range(max_exp_bits):
-        frac_items = 2 ** (non_sign_bits - 1 - max_exp_bits + e + 1)
-        boundaries = np.linspace(0.1, 1.0, frac_items + 1)
-        means = (boundaries[:-1] + boundaries[1:]) / 2.0
-        vals = (10.0 ** (-(max_exp_bits - 1) + e)) * means
-        data += vals.tolist()
-        if signed:
-            data += (-vals).tolist()
-    data.append(1.0)
-    if signed:
-        data.append(-1.0)
-    arr = np.sort(np.unique(np.asarray(data, np.float32)))
-    # pad/trim to exactly 256 by inserting midpoints of the largest gaps
-    while arr.size < 256:
-        gaps = np.diff(arr)
-        i = int(np.argmax(gaps))
-        arr = np.insert(arr, i + 1, (arr[i] + arr[i + 1]) / 2.0)
-    if arr.size > 256:
-        keep = np.linspace(0, arr.size - 1, 256).round().astype(int)
-        arr = arr[keep]
-    return arr.astype(np.float32)
-
-
-def _pad_to_blocks(x: jnp.ndarray) -> tuple[jnp.ndarray, int]:
-    flat = x.reshape(-1)
-    pad = (-flat.size) % BLOCK
-    if pad:
-        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
-    return flat.reshape(-1, BLOCK), pad
-
-
-def quantize(x: jnp.ndarray, signed: bool = True):
-    """x (any shape) -> (codes uint8 (nblocks, BLOCK), absmax (nblocks,) f32)."""
-    book = jnp.asarray(dynamic_codebook(signed))
-    blocks, _ = _pad_to_blocks(x.astype(jnp.float32))
-    absmax = jnp.max(jnp.abs(blocks), axis=1) + 1e-12
-    normed = blocks / absmax[:, None]
-    mids = (book[:-1] + book[1:]) / 2.0
-    codes = jnp.searchsorted(mids, normed).astype(jnp.uint8)
-    return codes, absmax
-
-
-def dequantize(codes: jnp.ndarray, absmax: jnp.ndarray, shape, signed: bool = True):
-    book = jnp.asarray(dynamic_codebook(signed))
-    vals = book[codes.astype(jnp.int32)] * absmax[:, None]
-    n = int(np.prod(shape))
-    return vals.reshape(-1)[:n].reshape(shape)
-
-
-def quant_state(x: jnp.ndarray, signed: bool = True) -> dict:
-    codes, absmax = quantize(x, signed)
-    return {"q": codes, "scale": absmax}
-
-
-def dequant_state(st: dict, shape, signed: bool = True) -> jnp.ndarray:
-    return dequantize(st["q"], st["scale"], shape, signed)
+__all__ = ["BLOCK", "dynamic_codebook", "quantize", "dequantize",
+           "quant_state", "dequant_state"]

@@ -1,0 +1,61 @@
+"""Quantized optimizer-state subsystem: every low-precision byte in one place.
+
+The paper's second headline result — 8-bit GaLore cutting optimizer memory
+82.5% and enabling LLaMA-7B pre-training on a 24 GB device — needs three
+codecs and one policy object, all owned here:
+
+  codec.py   blockwise dynamic-exponent INT8 (moved from optim/quant8.py,
+             which remains as a thin compatibility shim), signed linear INT4
+             with per-block absmax and 2-codes-per-byte packing (Q-GaLore
+             projector storage), and the axis-blocked INT8 layout the fused
+             Pallas kernels consume (blocks run along the kernel's swept
+             axis so one column/row tile covers whole quantization blocks).
+  policy.py  QuantPolicy — which dtype each piece of optimizer state uses
+             (moments fp32|int8, projectors fp32|bf16|int4), with per-path
+             overrides riding the SubspacePlan machinery and a
+             min_quant_size floor honored against the WEIGHT's size.
+
+Consumers: core/subspace.py resolves the policy into per-leaf plans,
+core/galore.py stores quantized compact moments, core/projector.py stores
+quantized projectors, kernels/galore_fused.py runs the dequant→Adam→requant
+epilogue in VMEM, distributed/state_sharding.py shards codes/scales, and
+checkpoint/manager.py round-trips the quantized trees.
+"""
+from repro.quant.codec import (
+    BLOCK,
+    QBLOCK,
+    dequant4_state,
+    dequant_state,
+    dequantize,
+    dequantize4,
+    dequantize_axis,
+    dynamic_codebook,
+    int4_codebook,
+    is_qstate,
+    quant4_state,
+    quant_state,
+    quantize,
+    quantize4,
+    quantize_axis,
+)
+from repro.quant.policy import MIN_QUANT_SIZE, QuantPolicy
+
+__all__ = [
+    "BLOCK",
+    "QBLOCK",
+    "MIN_QUANT_SIZE",
+    "QuantPolicy",
+    "dequant4_state",
+    "dequant_state",
+    "dequantize",
+    "dequantize4",
+    "dequantize_axis",
+    "dynamic_codebook",
+    "int4_codebook",
+    "is_qstate",
+    "quant4_state",
+    "quant_state",
+    "quantize",
+    "quantize4",
+    "quantize_axis",
+]

@@ -1,0 +1,232 @@
+"""Blockwise low-precision codecs for optimizer state.
+
+Three layouts, one module:
+
+  * Flat INT8 (``quantize``/``dequantize``) — the Dettmers et al. (2022)
+    dynamic-exponent codebook over 256-element blocks of the flattened
+    array. Moved here from ``optim/quant8.py`` (which remains a shim); this
+    is the storage layout of standalone 8-bit Adam and the numerical oracle
+    for ``kernels/adam8bit_update.py``.
+
+  * Flat INT4 (``quantize4``/``dequantize4``) — signed linear 15-level map
+    (q/7 for q in -7..7, exact zero preserved) with per-block absmax, two
+    codes packed per byte. This is the Q-GaLore projector storage format:
+    0.5 B/elem + 4 B absmax per 256 elems ≈ 8× smaller than an fp32
+    projector, and projectors tolerate the linear (non-dynamic) map because
+    their entries are near-uniform O(1/√m) rotations, not heavy-tailed
+    moments.
+
+  * Axis-blocked INT8 (``quantize_axis``/``dequantize_axis``) — the layout
+    the fused GaLore kernels consume: blocks of ``QBLOCK`` elements run
+    along ONE trailing axis (the kernel's swept axis), so a column/row tile
+    of the compact moment covers whole quantization blocks and the
+    dequant→Adam→requant epilogue never crosses a block boundary mid-tile.
+    Codes keep the logical (r, n)/(m, r) shape; scales shrink the blocked
+    axis by QBLOCK. QBLOCK = 128 = the TPU lane width, so a scale row maps
+    onto one lane-aligned vector per tile.
+
+All quantize paths compute in f32 and are shape-polymorphic over leading
+batch dims. Non-divisible tails are zero-padded before the absmax, which is
+exactly what the in-kernel masking reproduces (see galore_fused.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+BLOCK = 256   # flat-codec block (bitsandbytes convention)
+QBLOCK = 128  # axis-blocked codec block (TPU lane width)
+
+
+# ---------------------------------------------------------------------------
+# Codebooks
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def dynamic_codebook(signed: bool = True) -> np.ndarray:
+    """256 sorted codebook values in [-1, 1] (signed) or [0, 1] (unsigned).
+
+    Dynamic-exponent map (Dettmers et al., 2022): sign × power-of-10
+    exponent × linear fraction — dense near zero where Adam moments live.
+    """
+    total_bits = 8
+    sign_bits = 1 if signed else 0
+    non_sign_bits = total_bits - sign_bits
+    max_exp_bits = non_sign_bits - 1  # reserve indicator bit layout
+    data = [0.0]
+    for e in range(max_exp_bits):
+        frac_items = 2 ** (non_sign_bits - 1 - max_exp_bits + e + 1)
+        boundaries = np.linspace(0.1, 1.0, frac_items + 1)
+        means = (boundaries[:-1] + boundaries[1:]) / 2.0
+        vals = (10.0 ** (-(max_exp_bits - 1) + e)) * means
+        data += vals.tolist()
+        if signed:
+            data += (-vals).tolist()
+    data.append(1.0)
+    if signed:
+        data.append(-1.0)
+    arr = np.sort(np.unique(np.asarray(data, np.float32)))
+    # pad/trim to exactly 256 by inserting midpoints of the largest gaps
+    while arr.size < 256:
+        gaps = np.diff(arr)
+        i = int(np.argmax(gaps))
+        arr = np.insert(arr, i + 1, (arr[i] + arr[i + 1]) / 2.0)
+    if arr.size > 256:
+        keep = np.linspace(0, arr.size - 1, 256).round().astype(int)
+        arr = arr[keep]
+    return arr.astype(np.float32)
+
+
+@functools.lru_cache(maxsize=None)
+def int4_codebook() -> np.ndarray:
+    """16 values: symmetric linear q/7 for q in -7..7; code 15 aliases +1.
+
+    15 live levels keep an exact zero (a zeros-initialized projector
+    round-trips to zeros) and symmetric ±1 endpoints; the spare 16th code
+    decodes to +1 so any 4-bit pattern is valid."""
+    levels = [(q - 7) / 7.0 for q in range(15)] + [1.0]
+    return np.asarray(levels, np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Flat INT8 (blocks of the flattened array)
+# ---------------------------------------------------------------------------
+
+
+def _pad_to_blocks(x: jnp.ndarray, block: int = BLOCK) -> tuple[jnp.ndarray, int]:
+    flat = x.reshape(-1)
+    pad = (-flat.size) % block
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    return flat.reshape(-1, block), pad
+
+
+def quantize(x: jnp.ndarray, signed: bool = True):
+    """x (any shape) -> (codes uint8 (nblocks, BLOCK), absmax (nblocks,) f32)."""
+    book = jnp.asarray(dynamic_codebook(signed))
+    blocks, _ = _pad_to_blocks(x.astype(jnp.float32))
+    absmax = jnp.max(jnp.abs(blocks), axis=1) + 1e-12
+    normed = blocks / absmax[:, None]
+    mids = (book[:-1] + book[1:]) / 2.0
+    codes = jnp.searchsorted(mids, normed).astype(jnp.uint8)
+    return codes, absmax
+
+
+def dequantize(codes: jnp.ndarray, absmax: jnp.ndarray, shape, signed: bool = True):
+    book = jnp.asarray(dynamic_codebook(signed))
+    vals = book[codes.astype(jnp.int32)] * absmax[:, None]
+    n = int(np.prod(shape))
+    return vals.reshape(-1)[:n].reshape(shape)
+
+
+def quant_state(x: jnp.ndarray, signed: bool = True) -> dict:
+    codes, absmax = quantize(x, signed)
+    return {"q": codes, "scale": absmax}
+
+
+def dequant_state(st: dict, shape, signed: bool = True) -> jnp.ndarray:
+    return dequantize(st["q"], st["scale"], shape, signed)
+
+
+# ---------------------------------------------------------------------------
+# Flat INT4 (packed two codes per byte) — projector storage
+# ---------------------------------------------------------------------------
+
+
+def quantize4(x: jnp.ndarray):
+    """x (any shape) -> (packed uint8 (nblocks, BLOCK//2), absmax (nblocks,)).
+
+    Even flat positions occupy the low nibble, odd the high nibble."""
+    blocks, _ = _pad_to_blocks(x.astype(jnp.float32))
+    absmax = jnp.max(jnp.abs(blocks), axis=1) + 1e-12
+    normed = blocks / absmax[:, None]
+    q = jnp.clip(jnp.round(normed * 7.0), -7, 7).astype(jnp.int32) + 7  # 0..14
+    packed = (q[:, 0::2] | (q[:, 1::2] << 4)).astype(jnp.uint8)
+    return packed, absmax
+
+
+def dequantize4(packed: jnp.ndarray, absmax: jnp.ndarray, shape):
+    book = jnp.asarray(int4_codebook())
+    p = packed.astype(jnp.int32)
+    codes = jnp.stack([p & 0xF, p >> 4], axis=-1).reshape(p.shape[0], -1)
+    vals = book[codes] * absmax[:, None]
+    n = int(np.prod(shape))
+    return vals.reshape(-1)[:n].reshape(shape)
+
+
+def quant4_state(x: jnp.ndarray) -> dict:
+    packed, absmax = quantize4(x)
+    return {"q": packed, "scale": absmax}
+
+
+def dequant4_state(st: dict, shape) -> jnp.ndarray:
+    return dequantize4(st["q"], st["scale"], shape)
+
+
+# ---------------------------------------------------------------------------
+# Axis-blocked INT8 — compact-moment storage for the fused kernels
+# ---------------------------------------------------------------------------
+
+
+def _blocked(x: jnp.ndarray, axis: int, block: int):
+    """Pad `axis` to a block multiple and split it into (nb, block)."""
+    n = x.shape[axis]
+    nb = -(-n // block)
+    pad = nb * block - n
+    if pad:
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, pad)
+        x = jnp.pad(x, widths)
+    return x.reshape(x.shape[:axis] + (nb, block) + x.shape[axis + 1:]), nb
+
+
+def quantize_axis(x: jnp.ndarray, *, axis: int = -1, block: int = QBLOCK,
+                  signed: bool = True):
+    """Blockwise dynamic-INT8 along one trailing axis.
+
+    x (..., n, ...) -> (codes uint8, same shape as x;
+                        scales f32, `axis` shrunk to ceil(n/block)).
+    The block axis matches the fused kernel's sweep axis (last for left-side
+    compact moments (r, n), second-to-last for right-side (m, r)) so a
+    kernel tile always covers whole blocks."""
+    axis = axis % x.ndim
+    book = jnp.asarray(dynamic_codebook(signed))
+    mids = (book[:-1] + book[1:]) / 2.0
+    blocks, _ = _blocked(x.astype(jnp.float32), axis, block)
+    absmax = jnp.max(jnp.abs(blocks), axis=axis + 1) + 1e-12
+    normed = blocks / jnp.expand_dims(absmax, axis + 1)
+    codes = jnp.searchsorted(mids, normed).astype(jnp.uint8)
+    codes = codes.reshape(x.shape[:axis] + (-1,) + x.shape[axis + 1:])
+    codes = jax.lax.slice_in_dim(codes, 0, x.shape[axis], axis=axis)
+    return codes, absmax
+
+
+def dequantize_axis(codes: jnp.ndarray, scales: jnp.ndarray, *, axis: int = -1,
+                    block: int = QBLOCK, signed: bool = True) -> jnp.ndarray:
+    axis = axis % codes.ndim
+    book = jnp.asarray(dynamic_codebook(signed))
+    vals = book[codes.astype(jnp.int32)]
+    scale = jnp.repeat(scales, block, axis=axis)
+    scale = jax.lax.slice_in_dim(scale, 0, codes.shape[axis], axis=axis)
+    return vals * scale
+
+
+def quant_axis_state(x: jnp.ndarray, *, axis: int, signed: bool,
+                     block: int = QBLOCK) -> dict:
+    codes, scales = quantize_axis(x, axis=axis, block=block, signed=signed)
+    return {"q": codes, "scale": scales}
+
+
+def dequant_axis_state(st: dict, *, axis: int, signed: bool,
+                       block: int = QBLOCK) -> jnp.ndarray:
+    return dequantize_axis(st["q"], st["scale"], axis=axis, block=block,
+                           signed=signed)
+
+
+def is_qstate(x) -> bool:
+    """True for a quantized-leaf dict ({"q": codes, "scale": absmax})."""
+    return isinstance(x, dict) and set(x.keys()) == {"q", "scale"}

@@ -49,6 +49,59 @@ def test_quant_roundtrip_bounded_error(scale, seed):
 
 @settings(**SETTINGS)
 @given(
+    n=st.integers(1, 700),
+    rows=st.integers(1, 5),
+    scale=st.floats(1e-5, 1e3),
+    signed=st.booleans(),
+    seed=st.integers(0, 2**16),
+)
+def test_axis_codec_roundtrip_any_tail(n, rows, scale, signed, seed):
+    """Axis-blocked int8: bounded per-block relative error for every length,
+    including n < QBLOCK and non-divisible tails; codes keep the shape."""
+    from repro.quant import codec
+
+    x = jax.random.normal(jax.random.PRNGKey(seed), (rows, n)) * scale
+    if not signed:
+        x = jnp.abs(x)
+    codes, scales = codec.quantize_axis(x, axis=-1, signed=signed)
+    assert codes.shape == x.shape
+    assert scales.shape == (rows, -(-n // codec.QBLOCK))
+    x2 = codec.dequantize_axis(codes, scales, axis=-1, signed=signed)
+    # bound vs the PER-BLOCK absmax (the codec's own normalization unit)
+    blocks = -(-n // codec.QBLOCK)
+    pad = blocks * codec.QBLOCK - n
+    xp = np.pad(np.asarray(x), [(0, 0), (0, pad)]).reshape(rows, blocks, -1)
+    per_block = np.abs(xp).max(axis=2, keepdims=True) + 1e-30
+    err = np.pad(np.asarray(x - x2), [(0, 0), (0, pad)]).reshape(rows, blocks, -1)
+    assert float(np.max(np.abs(err) / per_block)) < 0.05
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 64),
+    r=st.integers(1, 40),
+    scale=st.floats(1e-5, 1e2),
+    seed=st.integers(0, 2**16),
+)
+def test_int4_codec_roundtrip_bounded(m, r, scale, seed):
+    """Packed int4: error ≤ half a level (1/14) of each block's absmax, any
+    (non-divisible) size; exact zeros round-trip exactly."""
+    from repro.quant import codec
+
+    x = jax.random.normal(jax.random.PRNGKey(seed), (m, r)) * scale
+    st4 = codec.quant4_state(x)
+    nb = -(-x.size // codec.BLOCK)
+    assert st4["q"].shape == (nb, codec.BLOCK // 2)
+    x2 = codec.dequant4_state(st4, x.shape)
+    pad = nb * codec.BLOCK - x.size
+    flat = np.pad(np.asarray(x).reshape(-1), (0, pad)).reshape(nb, codec.BLOCK)
+    per_block = np.abs(flat).max(axis=1, keepdims=True) + 1e-30
+    err = np.pad(np.asarray(x - x2).reshape(-1), (0, pad)).reshape(nb, codec.BLOCK)
+    assert float(np.max(np.abs(err) / per_block)) <= (0.5 / 7.0) + 1e-5
+
+
+@settings(**SETTINGS)
+@given(
     m=st.integers(4, 32),
     n=st.integers(4, 32),
     seed=st.integers(0, 2**16),
