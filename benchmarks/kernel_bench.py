@@ -8,10 +8,10 @@ Per representative leaf shape this times
 and reports the analytic bytes-moved model from EXPERIMENTS.md §Perf. Both
 paths dispatch through repro.kernels.ops, so on TPU this times the Pallas
 kernels and elsewhere the XLA reference composition (the analytic model is
-backend-independent). Also times the projector-refresh cost model from
-EXPERIMENTS.md §Subspace lifecycle: synchronized (all leaves' SVDs spike on
-one step) vs staggered (one leaf per refresh call, amortized across the
-window). Emits CSV rows via benchmarks.common and writes
+backend-independent). The projector-refresh rows (synchronized spike vs
+staggered step vs sharded per-replica ceiling) route through
+benchmarks.refresh_scaling — the one schema shared with
+results/BENCH_refresh.json. Emits CSV rows via benchmarks.common and writes
 results/BENCH_kernels.json.
 
   PYTHONPATH=src python -m benchmarks.kernel_bench [--quick] [--out PATH]
@@ -148,56 +148,6 @@ def bench_leaf(name, L, m, r, n, iters=5):
     return rec
 
 
-def bench_refresh(n_leaves: int, m: int, n: int, r: int, period: int, iters=3):
-    """Staggered vs synchronized projector refresh (EXPERIMENTS.md cost model).
-
-    Synchronized (the paper's Algorithm 2): every T-th step computes ALL
-    `n_leaves` leaf SVDs — a latency spike of `sync_spike_us` on that step.
-    Staggered (core/subspace.py offsets): each refresh call computes ONE
-    leaf's SVD, `n_leaves` times per window — the per-step ceiling drops to
-    `staggered_step_us` while total work per window stays the same. Reported
-    per backend; the spike/step ratio is the structural win and is
-    backend-independent."""
-    from repro.core.projector import compute_projector
-
-    key = jax.random.PRNGKey(42)
-    Gs = jax.random.normal(key, (n_leaves, m, n), jnp.float32)
-
-    @jax.jit
-    def sync_refresh(Gs):
-        # all leaves at once — what the every-T-th-step spike executes
-        return [compute_projector(Gs[i], r) for i in range(n_leaves)]
-
-    @jax.jit
-    def one_leaf(G):
-        return compute_projector(G, r)
-
-    t_sync, _ = time_fn(sync_refresh, Gs, iters=iters)
-    t_one, _ = time_fn(one_leaf, Gs[0], iters=iters)
-    rec = {
-        "bench": "refresh",
-        "n_leaves": n_leaves, "m": m, "n": n, "r": r, "period": period,
-        "backend": jax.default_backend(),
-        "sync_spike_us": t_sync * 1e6,          # worst step, synchronized
-        "staggered_step_us": t_one * 1e6,       # worst step, staggered
-        "spike_ratio": t_sync / t_one,
-        # MEASURED per-window totals: one sync batch vs n_leaves single-leaf
-        # calls. The SVD work is identical by construction, but the staggered
-        # total additionally carries n_leaves× the per-call dispatch overhead
-        # and forgoes any cross-leaf parallelism the backend finds in the
-        # batch — the ratio quantifies that amortization tax, it does NOT
-        # mean staggering does more subspace math.
-        "sync_window_us": t_sync * 1e6,
-        "staggered_window_us": t_one * 1e6 * n_leaves,
-        "staggered_window_overhead": (t_one * n_leaves) / t_sync,
-    }
-    emit("refresh_sync_spike", rec["sync_spike_us"],
-         f"n_leaves={n_leaves};period={period}")
-    emit("refresh_staggered_step", rec["staggered_step_us"],
-         f"spike_ratio={rec['spike_ratio']:.1f}")
-    return rec
-
-
 def main(quick: bool = False, out: str = "results/BENCH_kernels.json"):
     shapes = LEAF_SHAPES[:2] if quick else LEAF_SHAPES
     records = [bench_leaf(*s, iters=3 if quick else 5) for s in shapes]
@@ -211,10 +161,19 @@ def main(quick: bool = False, out: str = "results/BENCH_kernels.json"):
         rec["fused_tiled_bytes"] = tiled
         pad = tiled / rec["fused_bytes"]
         assert 1.0 <= pad < 1.25, (rec["leaf"], pad, rec)
-    records.append(bench_refresh(
+    # refresh rows route through the scaling harness (one schema for the
+    # synchronized spike, the staggered step AND the sharded cost-model
+    # ceiling — --quick used to re-time the synchronized micro only)
+    from benchmarks.refresh_scaling import (
+        bench_sync_vs_staggered,
+        sharded_cost_record,
+    )
+
+    records += bench_sync_vs_staggered(
         n_leaves=4 if quick else 12, m=512, n=1024, r=64, period=200,
         iters=2 if quick else 3,
-    ))
+    )
+    records.append(sharded_cost_record("llama_60m", n_dp=8))
     os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
     with open(out, "w") as f:
         json.dump(records, f, indent=2)

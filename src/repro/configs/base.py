@@ -133,6 +133,12 @@ class GaLoreConfig:
     rank_overrides: tuple = ()  # ((path_substring, rank), ...) — first match wins
     refresh_stagger: bool = False  # deterministic per-leaf refresh offsets in [0, T)
     adaptive_t: bool = False  # overlap-gated per-leaf period adaptation (Q-GaLore-style)
+    stagger_by_importance: bool = False  # order stagger offsets by tracked
+    # gradient norm (AdaRankGrad-style) instead of enumeration order; needs
+    # importance_order. Layout-identical: same offset set, permuted leaves.
+    importance_order: tuple = ()  # leaf paths in descending tracked-grad-norm
+    # order (stamped by the launcher from a measured gradient; static so every
+    # plan derivation — init, update, external refresh — agrees)
     t_min: int = 0  # adaptive period floor; 0 -> max(1, update_freq // 4)
     t_max: int = 0  # adaptive period ceiling; 0 -> 8 * update_freq
     overlap_hi: float = 0.9  # stretch the leaf period when refresh overlap >= hi
@@ -161,6 +167,10 @@ class TrainConfig:
     microbatch: int = 0  # >0 -> gradient accumulation
     galore_dp_compress: bool = False  # beyond-paper: all-reduce projected grads
     galore_external_refresh: bool = False  # refresh P in a separate jitted step
+    galore_refresh_shard: bool = False  # partition the due-leaf SVD work across
+    # data-parallel replicas and all-gather the refreshed projectors (implies
+    # external refresh; the per-refresh ceiling drops from Σ c_i to the max
+    # bin ≈ Σ c_i / n_dp — see distributed/step.py make_refresh_step)
     galore_fused_adam: bool = False  # single-kernel project→Adam→back per leaf
     # (requires optimizer adam/adamw; see kernels/galore_fused.py)
     galore_fused_apply: bool = False  # fold W ← W + G̃ into the fused-kernel

@@ -442,7 +442,9 @@ def make_fused_apply(cfg: GaLoreConfig, *, b1: float, b2: float, eps: float,
 
 
 def refresh_projectors(grads, galore_state, cfg: GaLoreConfig,
-                       exclude=DEFAULT_EXCLUDE, param_axes=None, step=None):
+                       exclude=DEFAULT_EXCLUDE, param_axes=None, step=None,
+                       assignment=None, shard_id=None, axis_name=None,
+                       precomputed=None):
     """External projector refresh (the launcher-driven path).
 
     step=None recomputes EVERY projector from `grads` — the legacy every-T
@@ -450,15 +452,28 @@ def refresh_projectors(grads, galore_state, cfg: GaLoreConfig,
     only the leaves due at `step` (per their plan offsets / adaptive periods)
     recompute, so a staggered launcher can call this every step and amortize
     the SVD work across the window. With a concrete Python-int step and the
-    static schedule the not-due leaves cost nothing at trace time."""
+    static schedule the not-due leaves cost nothing at trace time.
+
+    Distributed refresh (pod-scale): `assignment` (a partition_refresh tree)
+    + shard_id + axis_name run the per-unit SVDs masked to this replica and
+    psum-gather the results — the caller must be inside `shard_map` over
+    `axis_name`. Alternatively pass `precomputed` (a sharded_projector_tree
+    output gathered in a separate shard_map region, the make_refresh_step
+    pattern) so this epilogue lowers as the plain GSPMD program and stays
+    bit-identical to the unsharded refresh. Defaults touch nothing."""
     mgr = SubspaceManager(cfg, exclude, param_axes)
     plans = mgr.plans(grads)
     key = jax.random.fold_in(galore_state["key"], galore_state["step"])
     sched = galore_state.get("schedule")
     sched_step = galore_state["step"] if step is None else step
+    if assignment is not None:
+        precomputed = mgr.sharded_projector_tree(
+            grads, plans, sched, key, step=sched_step, force_all=step is None,
+            assignment=assignment, shard_id=shard_id, axis_name=axis_name,
+        )
     proj, sched = mgr.refresh_tree(
         grads, galore_state["proj"], sched, plans, key,
-        step=sched_step, force_all=step is None,
+        step=sched_step, force_all=step is None, precomputed=precomputed,
     )
     out = {**galore_state, "proj": proj}
     if sched is not None:

@@ -21,6 +21,18 @@ owns all of it:
     path in core/galore.py and the external-refresh launcher path
     (refresh_projectors / make_refresh_step), including a step-aware partial
     mode that refreshes only the leaves due at `step`.
+  * partition_refresh — the pod-scale distributed refresh planner: the due
+    work at a step becomes an explicit list of (leaf, stack-element) SVD
+    units, greedy-bin-packed across data-parallel replicas on the per-unit
+    cost model (importance-ordered when the policy asks, AdaRankGrad-style).
+    sharded_projector_tree consumes the resulting assignment under
+    `shard_map`: each replica runs only its own units' SVDs (runtime
+    `lax.cond` on the replica index) and a masked `psum` all-gathers the
+    refreshed projectors; refresh_tree(precomputed=...) then runs the store
+    / schedule epilogue outside the manual region. Per-refresh ceiling:
+    Σ c_i → max bin ≈ Σ c_i / n_dp, while every replica ends the step
+    holding identical P (bit-identical to the unsharded refresh —
+    per-element SVD matches the batched SVD bitwise).
 
 The adaptive policy's per-leaf state ({period, next, overlap} scalars) lives
 inside the galore optimizer state under the "schedule" key, so it checkpoints
@@ -48,6 +60,33 @@ from repro.core.projector import (
 from repro.utils import logical_constraint, path_str
 
 DEFAULT_EXCLUDE = ("embed", "dec_pos")
+
+
+def leaf_unit_cost(m: int, n: int, rank: int, method: str = "svd",
+                   power_iters: int = 2) -> float:
+    """Refresh cost of ONE (m, n) SVD unit (EXPERIMENTS.md §Refresh scaling).
+
+    Exact SVD is O(m·n·min(m, n)); the randomized / Newton–Schulz sketches are
+    matmul-dominated at O(m·n·s) per pass with s = rank + oversample columns
+    and (power_iters subspace + 1 sketch + 1 truncation) passes. Relative
+    costs are all bin-packing needs, so constants are dropped."""
+    if method == "svd":
+        return float(m) * float(n) * float(min(m, n))
+    s = min(rank + 8, m, n)
+    return float(2 * power_iters + 2) * float(m) * float(n) * float(s)
+
+
+def importance_order_from_grads(grads) -> tuple:
+    """Leaf paths in descending Frobenius-norm order — the launcher measures
+    this once from a real gradient and stamps it into
+    GaLoreConfig.importance_order (static, so every plan derivation agrees)."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(grads)
+    scored = []
+    for pth, g in flat:
+        if not hasattr(g, "ndim") or g.ndim < 2:
+            continue
+        scored.append((float(jnp.linalg.norm(g.astype(jnp.float32))), path_str(pth)))
+    return tuple(p for _, p in sorted(scored, key=lambda t: (-t[0], t[1])))
 
 
 def rank_axis(kept_label):
@@ -166,8 +205,10 @@ class SubspaceManager:
         cfg = self.cfg
         flat, treedef = jax.tree_util.tree_flatten_with_path(params)
         raw: list[SubspacePlan] = []
+        paths: list[str] = []
         for pth, p in flat:
             path = path_str(pth)
+            paths.append(path)
             # min_quant_size is gated on the leaf's FULL element count (the
             # weight, not the compact moment) — see quant/policy.py
             size = int(np.prod(p.shape)) if hasattr(p, "shape") else 0
@@ -188,15 +229,92 @@ class SubspaceManager:
                 moments=moments, proj_store=proj_store,
             ))
 
-        n_galore = sum(1 for pl in raw if pl.galore)
+        galore_idx = [i for i, pl in enumerate(raw) if pl.galore]
+        n_galore = len(galore_idx)
         if cfg.refresh_stagger and n_galore > 0:
-            idx = 0
-            for i, pl in enumerate(raw):
-                if pl.galore:
-                    offset = (idx * cfg.update_freq) // n_galore
-                    raw[i] = dataclasses.replace(pl, refresh_offset=offset)
-                    idx += 1
+            order = list(range(n_galore))
+            if cfg.stagger_by_importance and cfg.importance_order:
+                # AdaRankGrad-style: the most important leaf (largest tracked
+                # gradient norm) refreshes first in the window. Same offset
+                # SET as enumeration order — only the leaf↦offset permutation
+                # changes, so the state layout is untouched.
+                order.sort(key=lambda j: (self.importance_rank(paths[galore_idx[j]]), j))
+            for pos, j in enumerate(order):
+                i = galore_idx[j]
+                offset = (pos * cfg.update_freq) // n_galore
+                raw[i] = dataclasses.replace(raw[i], refresh_offset=offset)
         return jax.tree_util.tree_unflatten(treedef, raw)
+
+    def importance_rank(self, path: str) -> int:
+        """Position of a leaf in cfg.importance_order (first match wins);
+        unlisted leaves sort after every listed one, in enumeration order."""
+        for i, pat in enumerate(self.cfg.importance_order):
+            if pat == path or pat in path:
+                return i
+        return len(self.cfg.importance_order)
+
+    # -- distributed refresh partitioning ----------------------------------
+
+    def leaf_due(self, plan: SubspacePlan, step) -> Optional[bool]:
+        """Static dueness of a leaf at `step`; None when undecidable at trace
+        time (adaptive-T periods or a traced step). Delegates to the one
+        refresh predicate (_leaf_due) so partition_refresh can never desync
+        from refresh_tree / sharded_projector_tree."""
+        if not plan.galore:
+            return False
+        if self.adaptive or not isinstance(step, (int, np.integer)):
+            return None
+        return bool(self._leaf_due(plan, None, int(step), False, False))
+
+    def partition_refresh(self, params, step, n_shards: int, plans=None):
+        """Greedy bin-packing of the refresh work due at `step` across
+        `n_shards` data-parallel replicas.
+
+        The work list is one unit per (leaf, stack-element): stacked (L, m, n)
+        / (L, E, m, n) leaves contribute lead-many independent SVDs, so they
+        split across replicas instead of serializing on one. Units are
+        ordered by importance_rank (when configured) then cost-descending
+        (LPT) and assigned to the least-loaded bin — max bin ≤ mean + max c_i
+        regardless of ordering (tests/test_properties.py).
+
+        Returns (assignment, loads): `assignment` mirrors params with an
+        int32 numpy array per leaf over the flattened lead dims (shape (1,)
+        for plain 2-D leaves) holding the owning shard id, -1 for non-galore
+        or not-due leaves; `loads` is the per-shard cost totals whose max is
+        the sharded refresh's analytic per-replica ceiling. step=None means
+        force-all (the legacy spike refresh); a non-static step (adaptive-T
+        or traced) lists every galore leaf and leaves dueness to the runtime
+        conds in refresh_tree."""
+        cfg = self.cfg
+        plans = self.plans(params) if plans is None else plans
+        flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+        plan_flat = treedef.flatten_up_to(plans)
+        units = []  # (imp_rank, -cost, leaf_idx, elem_idx, cost)
+        arrs: list[Optional[np.ndarray]] = []
+        for li, ((pth, p), plan) in enumerate(zip(flat, plan_flat)):
+            if not plan.galore:
+                arrs.append(np.full((1,), -1, np.int32))
+                continue
+            lead = int(np.prod(p.shape[:-2])) if p.ndim > 2 else 1
+            arr = np.full((lead,), -1, np.int32)
+            arrs.append(arr)
+            due = True if step is None else self.leaf_due(plan, step)
+            if due is False:
+                continue
+            m, n = p.shape[-2], p.shape[-1]
+            if plan.side == "right":
+                m, n = n, m
+            cost = leaf_unit_cost(m, n, plan.rank, cfg.projector, cfg.power_iters)
+            imp = self.importance_rank(path_str(pth))
+            for ei in range(lead):
+                units.append((imp, -cost, li, ei, cost))
+        units.sort(key=lambda u: u[:4])
+        loads = np.zeros((max(1, n_shards),), np.float64)
+        for _, _, li, ei, cost in units:
+            shard = int(np.argmin(loads))
+            arrs[li][ei] = shard
+            loads[shard] += cost
+        return jax.tree_util.tree_unflatten(treedef, arrs), loads
 
     # -- schedule state ----------------------------------------------------
 
@@ -226,8 +344,89 @@ class SubspaceManager:
 
     # -- refresh -----------------------------------------------------------
 
+    def _leaf_due(self, plan, nxt, step, force_all, adaptive):
+        """Shared dueness predicate: Python bool when statically decidable
+        (force_all, or a concrete step under the fixed schedule), else a
+        traced scalar."""
+        if force_all:
+            return True
+        if adaptive:
+            return jnp.asarray(step) >= nxt
+        T = plan.refresh_period
+        return ((step % T) == (plan.refresh_offset % T)) | (step == 0)
+
+    def sharded_projector_tree(self, grads, plans, sched, key, *, step,
+                               force_all: bool = False, assignment=None,
+                               shard_id=None, axis_name=None):
+        """Distributed projector compute: masked per-unit SVDs + psum gather.
+
+        Must run inside `shard_map` over the `axis_name` mesh axes:
+        `assignment` is a partition_refresh tree, `shard_id` this replica's
+        index. Every (leaf, stack-element) SVD runs under a `lax.cond` on
+        ownership, so a replica executes only its own units at runtime;
+        non-owners (and runtime-not-due leaves) contribute zeros, making the
+        psum an owner-to-all broadcast. Per-element SVD is bitwise identical
+        to the batched (vmapped) SVD of the unsharded path on the same
+        backend, which is what the sharded-parity tests pin.
+
+        Returns a tree mirroring grads: full-leaf f32 P_new where the leaf is
+        in the work list (zeros if it turns out not due at runtime), scalar
+        zero placeholders elsewhere. Feed it to refresh_tree(precomputed=...)
+        — run OUTSIDE the shard_map region — so the store / lazy-refresh /
+        adaptive-schedule epilogue lowers as the exact same GSPMD program as
+        the unsharded refresh (keeping even the overlap scalars bit-identical;
+        an epilogue inside the manual region reduces its einsums in a
+        different order and drifts in the last float bits)."""
+        cfg = self.cfg
+        adaptive = sched is not None
+        nxt_tree = (sched["next"] if adaptive else
+                    jax.tree_util.tree_map(lambda p: jnp.zeros((), jnp.int32), grads))
+
+        def leaf(g, plan, nxt, assign):
+            if not plan.galore:
+                return jnp.zeros((), jnp.float32)
+            assign = np.asarray(assign).reshape(-1)
+            if (assign < 0).all():
+                return jnp.zeros((), jnp.float32)  # not in this work list
+            due = self._leaf_due(plan, nxt, step, force_all, adaptive)
+            if due is False:
+                return jnp.zeros((), jnp.float32)
+            rt_due = None if isinstance(due, bool) else due
+            lead = g.shape[:-2]
+            L = int(np.prod(lead)) if lead else 1
+            g2 = g.reshape((L,) + g.shape[-2:])
+            pshape = proj_shape(g2[0], plan)
+            outs = []
+            for i in range(L):
+                owner = int(assign[i])
+                if owner < 0:
+                    outs.append(jnp.zeros(pshape, jnp.float32))
+                    continue
+                mine = shard_id == owner
+                if rt_due is not None:
+                    mine = jnp.logical_and(mine, rt_due)
+                outs.append(jax.lax.cond(
+                    mine,
+                    lambda gi=g2[i]: compute_leaf_projector(gi, plan, cfg, key),
+                    lambda: jnp.zeros(pshape, jnp.float32),
+                ))
+            P_new = jnp.stack(outs).reshape(lead + pshape) if lead else outs[0]
+            return jax.lax.psum(P_new, axis_name)
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat = [
+            leaf(g, plan, nxt, a)
+            for g, plan, nxt, a in zip(
+                flat_g,
+                treedef.flatten_up_to(plans),
+                treedef.flatten_up_to(nxt_tree),
+                treedef.flatten_up_to(assignment),
+            )
+        ]
+        return treedef.unflatten(flat)
+
     def refresh_tree(self, grads, proj, sched, plans, key, *, step,
-                     force_all: bool = False):
+                     force_all: bool = False, precomputed=None):
         """One refresh pass over every leaf; returns (proj', sched').
 
         force_all=True recomputes every galore projector unconditionally (the
@@ -236,6 +435,11 @@ class SubspaceManager:
         step the not-due leaves are skipped at trace time (no conds at all —
         the partial-refresh launcher path); with a traced step or the
         adaptive policy each leaf gets a `lax.cond`.
+
+        precomputed: optional sharded_projector_tree output — leaves with a
+        gathered f32 P_new use it instead of computing the SVD here, so the
+        expensive projector math can be partitioned across replicas while
+        this epilogue stays the unsharded program bit for bit.
         """
         cfg = self.cfg
         adaptive = sched is not None
@@ -247,12 +451,13 @@ class SubspaceManager:
         nxt_tree = sched["next"] if adaptive else jax.tree_util.tree_map(zero_i, grads)
         ov_tree = sched["overlap"] if adaptive else jax.tree_util.tree_map(zero_f, grads)
 
-        def compute_new(g, P_store, plan, per, nxt, ov_old):
+        def compute_new(g, P_store, plan, per, nxt, ov_old, P_new=None):
             # P may be stored quantized (bf16 / packed int4, per plan) —
             # dequantize on read; the new projector is re-stored in the same
             # form so the state of record stays packed.
             P_old = read_projector(P_store, proj_shape(g, plan))
-            P_new = compute_leaf_projector(g, plan, cfg, key)
+            if P_new is None:
+                P_new = compute_leaf_projector(g, plan, cfg, key)
             new_store = store_projector(P_new, plan.proj_store)
             if plan.proj_store == "int4" and cfg.quant.lazy_refresh:
                 # Q-GaLore lazy refresh: identical int4 codes mean the new
@@ -280,39 +485,39 @@ class SubspaceManager:
                              jnp.asarray(step) + per2).astype(jnp.int32)
             return new_store, per2.astype(jnp.int32), nxt2, jnp.where(has_old, ov, 0.0)
 
-        def due_of(plan, nxt):
-            if force_all:
-                return True
-            if adaptive:
-                return jnp.asarray(step) >= nxt
-            T = plan.refresh_period
-            return ((step % T) == (plan.refresh_offset % T)) | (step == 0)
-
-        def leaf(g, P_old, plan, per, nxt, ov_old):
+        def leaf(g, P_old, plan, per, nxt, ov_old, pc):
+            old = (P_old, per, nxt, ov_old)
             if not plan.galore:
-                return P_old, per, nxt, ov_old
-            due = due_of(plan, nxt)
+                return old
+            # a scalar placeholder means "not in this refresh's work list"
+            pc = None if (pc is None or pc.ndim == 0) else pc
+            due = self._leaf_due(plan, nxt, step, force_all, adaptive)
             if isinstance(due, bool):  # static decision (Python-int step)
                 if not due:
-                    return P_old, per, nxt, ov_old
-                return compute_new(g, P_old, plan, per, nxt, ov_old)
+                    return old
+                return compute_new(g, P_old, plan, per, nxt, ov_old, P_new=pc)
+            if precomputed is not None and pc is None:
+                return old  # sharded partial refresh skipped this leaf
             return jax.lax.cond(
                 due,
-                lambda _: compute_new(g, P_old, plan, per, nxt, ov_old),
-                lambda _: (P_old, per, nxt, ov_old),
+                lambda _: compute_new(g, P_old, plan, per, nxt, ov_old, P_new=pc),
+                lambda _: old,
                 operand=None,
             )
 
         flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        pc_flat = (treedef.flatten_up_to(precomputed) if precomputed is not None
+                   else [None] * len(flat_g))
         flat = [
-            leaf(g, P, plan, per, nxt, ov)
-            for g, P, plan, per, nxt, ov in zip(
+            leaf(g, P, plan, per, nxt, ov, pc)
+            for g, P, plan, per, nxt, ov, pc in zip(
                 flat_g,
                 treedef.flatten_up_to(proj),
                 treedef.flatten_up_to(plans),
                 treedef.flatten_up_to(per_tree),
                 treedef.flatten_up_to(nxt_tree),
                 treedef.flatten_up_to(ov_tree),
+                pc_flat,
             )
         ]
         proj_out = treedef.unflatten([t[0] for t in flat])

@@ -143,6 +143,28 @@ def _galore_schedule_axes(p_axes):
     return {"period": scalars, "next": scalars, "overlap": scalars}
 
 
+def galore_refresh_gather_axes(gcfg: GaLoreConfig, p_axes, p_struct):
+    """Logical axes of the GATHERED f32 projector tree a sharded refresh
+    hands back to the epilogue (make_refresh_step): the shard_map region
+    computes with replicated per-replica views (each replica owns whole
+    (leaf, stack-element) SVD units; the masked psum leaves every replica
+    holding identical full leaves), and these axes re-constrain that output
+    so the kept weight dim lands back on its mesh axis before the store /
+    schedule epilogue — rank dims stay replicated (core/projector.py note),
+    and the packed proj_store forms re-quantize downstream of this tree, so
+    the axes here are always the unpacked (kept, None) layout. Non-galore
+    leaves are scalar placeholders."""
+    plans = plan_for_params(p_struct, gcfg)
+
+    def per_leaf(ax, plan):
+        if not plan.galore:
+            return SCALAR
+        kept = ax[-2] if plan.side == "left" else ax[-1]
+        return tuple(ax[:-2]) + (kept, None)
+
+    return jax.tree_util.tree_map(per_leaf, p_axes, plans, is_leaf=is_axes)
+
+
 def _stats_axes(tc: TrainConfig, p_axes, p_struct):
     if tc.optimizer in ("adam", "adamw"):
         return _adam_axes(p_axes)

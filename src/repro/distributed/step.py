@@ -166,7 +166,7 @@ def _make_fused_apply_train_step(cfg, tc, rules, opt, loss_of):
     apply_fn = make_fused_apply(
         gcfg, b1=tc.b1, b2=tc.b2, eps=tc.eps, weight_decay=wd,
         param_axes=M.param_axes(cfg),
-        external_refresh=tc.galore_external_refresh,
+        external_refresh=(tc.galore_external_refresh or tc.galore_refresh_shard),
     )
 
     def train_step(params, opt_state, batch):
@@ -200,12 +200,48 @@ def make_refresh_step(cfg: ModelConfig, tc: TrainConfig, rules: Optional[Shardin
     SubspaceManager's partial mode — only the leaves due at that step (per
     their stagger offsets / adaptive periods) recompute, amortizing the SVD
     work across the window; with a concrete Python-int step the not-due
-    leaves are skipped at trace time (no conds in the lowered program)."""
+    leaves are skipped at trace time (no conds in the lowered program).
+
+    tc.galore_refresh_shard (and n_dp > 1): the pod-scale distributed
+    refresh. The due work is bin-packed across the data-parallel replicas
+    (SubspaceManager.partition_refresh — one unit per (leaf, stack-element)
+    SVD, greedy on the cost model), each replica computes only its assigned
+    units inside a `shard_map` over the DP mesh axes, and a masked psum
+    all-gathers the refreshed projectors so every replica holds identical P.
+    Per-refresh ceiling: Σ c_i → max bin ≈ Σ c_i / n_dp. With the flag off
+    or n_dp == 1 this function lowers the exact single-program path as
+    before, bit for bit. The shard_map region runs with replicated views
+    (the SVD of a unit needs its full (m, n) gradient anyway); the gathered
+    outputs are re-constrained onto the persistent state sharding via
+    state_sharding.galore_refresh_gather_axes."""
     from repro.core.galore import refresh_projectors
-    from repro.optim.factory import galore_state_index
+    from repro.core.subspace import SubspaceManager
+    from repro.optim.factory import effective_galore_config, galore_state_index
 
     assert tc.galore is not None
     idx = galore_state_index(tc)
+    axes = M.param_axes(cfg)
+
+    sharded = bool(tc.galore_refresh_shard) and rules is not None
+    if sharded:
+        from repro.launch.mesh import data_parallel_axes, data_parallel_size
+
+        dp_axes = data_parallel_axes(rules)
+        n_dp = data_parallel_size(rules)
+        sharded = n_dp > 1 and len(dp_axes) > 0
+    if sharded:
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        gcfg = effective_galore_config(tc)
+        mgr = SubspaceManager(gcfg, param_axes=axes)
+        mesh = rules.mesh
+
+        def shard_index():
+            i = jnp.zeros((), jnp.int32)
+            for ax in dp_axes:
+                i = i * mesh.shape[ax] + jax.lax.axis_index(ax)
+            return i
 
     def refresh_step(params, opt_state, batch, step=None):
         with sharding_context(rules):
@@ -217,12 +253,58 @@ def make_refresh_step(cfg: ModelConfig, tc: TrainConfig, rules: Optional[Shardin
             grads = jax.grad(
                 lambda p: M.loss_fn(cfg, p, batch, z_loss=tc.z_loss)[0]
             )(params)
-            new_galore = refresh_projectors(
-                grads, opt_state[idx], tc.galore, param_axes=M.param_axes(cfg),
-                step=step,
+            if not sharded:
+                new_galore = refresh_projectors(
+                    grads, opt_state[idx], tc.galore, param_axes=M.param_axes(cfg),
+                    step=step,
+                )
+                return opt_state[:idx] + (new_galore,) + opt_state[idx + 1:]
+
+        # --- distributed projector compute (outside the sharding context:
+        # inside the manual shard_map region with_sharding_constraint is
+        # illegal, and logical_constraint no-ops without an active context) ---
+        assignment, _ = mgr.partition_refresh(params, step, n_dp)
+        galore_state = opt_state[idx]
+        sub = {"step": galore_state["step"], "key": galore_state["key"]}
+        if "schedule" in galore_state:
+            sub["schedule"] = galore_state["schedule"]
+
+        def body(g, s):
+            plans = mgr.plans(g)
+            key = jax.random.fold_in(s["key"], s["step"])
+            eff = s["step"] if step is None else step
+            return mgr.sharded_projector_tree(
+                g, plans, s.get("schedule"), key, step=eff,
+                force_all=step is None, assignment=assignment,
+                shard_id=shard_index(),
+                axis_name=dp_axes if len(dp_axes) > 1 else dp_axes[0],
             )
-            opt_state = opt_state[:idx] + (new_galore,) + opt_state[idx + 1:]
-        return opt_state
+
+        p_new = shard_map(
+            body, mesh=mesh, in_specs=(P(), P()), out_specs=P(),
+            check_rep=False,
+        )(grads, sub)
+
+        with sharding_context(rules):
+            # land the gathered projectors back on the kept-dim mesh axis,
+            # then run the store / lazy-refresh / adaptive-schedule epilogue
+            # as the plain GSPMD program — bit-identical to the unsharded
+            # refresh (the parity tests pin this down to the overlap scalars)
+            from repro.distributed.state_sharding import galore_refresh_gather_axes
+            from repro.utils import is_axes
+
+            p_struct = jax.eval_shape(lambda: params)
+            gather_axes = galore_refresh_gather_axes(gcfg, axes, p_struct)
+            p_new = jax.tree_util.tree_map(
+                lambda ax, x: (logical_constraint(x, *ax)
+                               if is_axes(ax) and len(ax) == x.ndim else x),
+                gather_axes, p_new, is_leaf=is_axes,
+            )
+            new_galore = refresh_projectors(
+                grads, galore_state, tc.galore, param_axes=axes, step=step,
+                precomputed=p_new,
+            )
+        return opt_state[:idx] + (new_galore,) + opt_state[idx + 1:]
 
     return refresh_step
 

@@ -27,6 +27,32 @@ def make_host_mesh():
     return jax.make_mesh((n, 1), ("data", "model"))
 
 
+def make_sim_mesh(n_dp: int, n_model: int = 1):
+    """(data=n_dp, model=n_model) mesh over the FIRST n_dp·n_model host
+    devices — the simulated-pod harness (CI forces 8 host devices with
+    XLA_FLAGS=--xla_force_host_platform_device_count=8, then benchmarks sweep
+    n_dp ∈ {1, 2, 4, 8} without restarting the process)."""
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devs = np.asarray(jax.devices()[: n_dp * n_model]).reshape(n_dp, n_model)
+    return Mesh(devs, ("data", "model"))
+
+
+def data_parallel_axes(rules: ShardingRules) -> tuple:
+    """Mesh axis names carrying data parallelism (the `batch` rule): the axes
+    the sharded projector refresh partitions work over and psum-gathers on."""
+    ax = rules.rules.get("batch")
+    if ax is None:
+        return ()
+    return tuple(ax) if isinstance(ax, (tuple, list)) else (ax,)
+
+
+def data_parallel_size(rules: ShardingRules) -> int:
+    """Number of data-parallel replicas (n_dp) under the rule set."""
+    return rules.mesh_axis_size(rules.rules.get("batch"))
+
+
 # ---------------------------------------------------------------------------
 # Logical -> mesh axis rule sets
 # ---------------------------------------------------------------------------

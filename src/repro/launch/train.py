@@ -48,6 +48,71 @@ def build_state(cfg, tc, rules, key):
     return params, opt_state
 
 
+def _with_measured_importance(cfg, tc: TrainConfig, params, batch) -> TrainConfig:
+    """Stamp GaLoreConfig.importance_order from one measured gradient: the
+    per-leaf Frobenius norms of the first batch's gradient, descending. The
+    order is static config, so every plan derivation (optimizer init, update,
+    external refresh, partitioning) agrees on the importance-ranked stagger."""
+    from repro.core.subspace import importance_order_from_grads
+
+    grads = jax.grad(
+        lambda p: M.loss_fn(cfg, p, batch, z_loss=tc.z_loss)[0]
+    )(params)
+    order = importance_order_from_grads(grads)
+    return dataclasses.replace(
+        tc, galore=dataclasses.replace(tc.galore, importance_order=order))
+
+
+def _make_refresh_caller(cfg, tc: TrainConfig, rules):
+    """Launcher-side external refresh driver: returns
+    maybe_refresh(params, opt_state, batch, step) -> opt_state.
+
+    Staggered schedules call the partial refresh on due steps only (the due
+    phases are known host-side from the plan offsets); the concrete step is
+    folded to a window phase (phase % T == step % T, phase 0 only at real
+    step 0) so jit retraces are bounded by n_galore + 1. Adaptive-T needs the
+    true step value in the schedule state, so it passes a traced int32 — one
+    trace, per-leaf runtime conds. The legacy un-staggered schedule keeps the
+    every-T force-all spike."""
+    from repro.distributed.step import make_refresh_step
+
+    from repro.core.subspace import SubspaceManager, SubspacePlan
+    from repro.optim.factory import effective_galore_config
+
+    gcfg = tc.galore
+    T = gcfg.update_freq
+    refresh = make_refresh_step(cfg, tc, rules)
+    # the pre-refresh opt_state is dead after the call — donate it so the
+    # refresh never holds two copies of the optimizer state
+    jit_static = jax.jit(refresh, static_argnums=(3,), donate_argnums=(1,))
+    jit_traced = jax.jit(refresh, donate_argnums=(1,))
+    # host-side due-phase set: with K galore leaves only K distinct offsets
+    # exist, so all other phases are statically known no-ops — skip them
+    # without tracing (T can be 200 with K ≈ 7; tracing 194 identity
+    # programs would dominate startup)
+    p_struct = jax.eval_shape(lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+    plans = SubspaceManager(effective_galore_config(tc),
+                            param_axes=M.param_axes(cfg)).plans(p_struct)
+    due_offsets = {pl.refresh_offset % T for pl in jax.tree_util.tree_leaves(
+        plans, is_leaf=lambda x: isinstance(x, SubspacePlan)) if pl.galore}
+
+    def maybe_refresh(params, opt_state, batch, step):
+        if gcfg.adaptive_t:
+            return jit_traced(params, opt_state, batch, jnp.int32(step))
+        if gcfg.refresh_stagger:
+            if step != 0 and step % T not in due_offsets:
+                return opt_state  # statically not due for any leaf
+            # phase p and T + p are due-equivalent for p != 0, and phase 0
+            # only at the real step 0 — at most n_galore + 1 traces ever
+            phase = 0 if step == 0 else T + step % T
+            return jit_static(params, opt_state, batch, phase)
+        if step % T == 0:
+            return jit_static(params, opt_state, batch, None)
+        return opt_state
+
+    return maybe_refresh
+
+
 def train_loop(run: RunConfig, tc: TrainConfig, cfg=None, on_step=None):
     cfg = cfg or get_config(run.arch, smoke=run.smoke)
     mesh = mesh_lib.make_host_mesh()
@@ -61,12 +126,21 @@ def train_loop(run: RunConfig, tc: TrainConfig, cfg=None, on_step=None):
         )
     )
     ckpt = CheckpointManager(run.ckpt_dir)
-    train_step, opt = make_train_step(cfg, tc, rules)
-    jitted = jax.jit(train_step, donate_argnums=(0, 1))
 
     start_step = 0
     latest = ckpt.latest_step()
     key = jax.random.PRNGKey(tc.seed)
+    gcfg = tc.galore
+    if gcfg is not None and gcfg.stagger_by_importance and not gcfg.importance_order:
+        with mesh:
+            probe = M.init_params(cfg, key)
+            tc = _with_measured_importance(cfg, tc, probe, data.batch(0))
+            del probe
+    external = gcfg is not None and (tc.galore_external_refresh
+                                     or tc.galore_refresh_shard)
+    train_step, opt = make_train_step(cfg, tc, rules)
+    jitted = jax.jit(train_step, donate_argnums=(0, 1))
+    maybe_refresh = _make_refresh_caller(cfg, tc, rules) if external else None
     params, opt_state = build_state(cfg, tc, rules, key)
     if latest is not None:
         meta = ckpt.meta(latest)
@@ -81,6 +155,8 @@ def train_loop(run: RunConfig, tc: TrainConfig, cfg=None, on_step=None):
     for step in range(start_step, run.steps):
         t0 = time.time()
         batch = data.batch(step)
+        if maybe_refresh is not None:
+            opt_state = maybe_refresh(params, opt_state, batch, step)
         params, opt_state, metrics = jitted(params, opt_state, batch)
         dt = time.time() - t0
         ema_dt = dt if ema_dt is None else 0.9 * ema_dt + 0.1 * dt
@@ -119,6 +195,17 @@ def main():
                     help="overlap-gated per-leaf refresh period (Q-GaLore-style)")
     ap.add_argument("--galore-stagger", action="store_true",
                     help="stagger per-leaf projector refreshes across the window")
+    ap.add_argument("--galore-stagger-importance", action="store_true",
+                    help="order stagger offsets by measured gradient norm "
+                         "(AdaRankGrad-style; implies --galore-stagger)")
+    ap.add_argument("--galore-external-refresh", action="store_true",
+                    help="refresh projectors in a dedicated jitted step "
+                         "driven by the launcher (no in-step SVD cond)")
+    ap.add_argument("--galore-refresh-shard", action="store_true",
+                    help="partition the refresh SVD work across data-parallel "
+                         "replicas and all-gather the projectors (implies "
+                         "external refresh; per-refresh ceiling Σc_i → max "
+                         "bin ≈ Σc_i/n_dp)")
     ap.add_argument("--galore-fused-apply", action="store_true",
                     help="fold the weight update into the fused-kernel "
                          "epilogue (requires --galore-fused)")
@@ -136,6 +223,7 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args()
 
     from repro.quant import QuantPolicy
@@ -144,7 +232,9 @@ def main():
         GaLoreConfig(rank=args.galore_rank, update_freq=args.galore_t,
                      rank_frac=args.galore_rank_frac,
                      adaptive_t=args.galore_adaptive_t,
-                     refresh_stagger=args.galore_stagger,
+                     refresh_stagger=(args.galore_stagger
+                                      or args.galore_stagger_importance),
+                     stagger_by_importance=args.galore_stagger_importance,
                      quant=QuantPolicy(moments=args.quant_moments,
                                        projectors=args.quant_proj,
                                        lazy_refresh=args.quant_lazy_refresh))
@@ -155,15 +245,21 @@ def main():
         ap.error("--galore-fused requires --galore-rank or --galore-rank-frac > 0")
     if args.galore_fused_apply and not args.galore_fused:
         ap.error("--galore-fused-apply requires --galore-fused")
+    if args.galore_refresh_shard and galore is None:
+        ap.error("--galore-refresh-shard requires --galore-rank or "
+                 "--galore-rank-frac > 0")
     tc = TrainConfig(
         optimizer=args.optimizer, galore=galore, lr=args.lr, total_steps=args.steps,
         warmup_steps=max(1, args.steps // 10),
         galore_fused_adam=args.galore_fused,
         galore_fused_apply=args.galore_fused_apply,
+        galore_external_refresh=args.galore_external_refresh,
+        galore_refresh_shard=args.galore_refresh_shard,
     )
     run = RunConfig(
         arch=args.arch, smoke=not args.full, steps=args.steps,
         batch_per_host=args.batch, seq_len=args.seq, ckpt_dir=args.ckpt_dir,
+        log_every=args.log_every,
     )
     train_loop(run, tc)
 

@@ -154,6 +154,69 @@ def test_projection_roundtrip_contraction(lead, m, n, seed):
 
 
 @settings(**SETTINGS)
+@given(
+    n_leaves=st.integers(1, 10),
+    n_shards=st.integers(1, 9),
+    lead=st.integers(1, 4),
+    seed=st.integers(0, 2**16),
+)
+def test_refresh_partition_balanced_and_exact(n_leaves, n_shards, lead, seed):
+    """Greedy refresh bin-packing invariants, any tree / shard count:
+    every due (leaf, stack-element) unit is assigned to exactly one shard in
+    range, loads account for exactly the assigned units, and the max bin
+    respects the greedy bound max ≤ mean + max_unit_cost."""
+    from repro.core.subspace import SubspaceManager, leaf_unit_cost
+
+    rng = np.random.RandomState(seed)
+    params = {}
+    for i in range(n_leaves):
+        m = int(rng.randint(12, 80))
+        n = int(rng.randint(12, 80))
+        shape = (lead, m, n) if rng.rand() < 0.5 else (m, n)
+        params[f"w{i}"] = jnp.zeros(shape)
+    params["bias"] = jnp.zeros((7,))  # never assigned
+    cfg = GaLoreConfig(rank=8, update_freq=4)
+    mgr = SubspaceManager(cfg)
+    plans = mgr.plans(params)
+    assignment, loads = mgr.partition_refresh(params, None, n_shards)
+
+    total = 0.0
+    per_shard = np.zeros(n_shards)
+    n_units = 0
+    for k, p in params.items():
+        a = np.asarray(assignment[k]).reshape(-1)
+        plan = plans[k]
+        if not plan.galore:
+            assert (a == -1).all()
+            continue
+        exp_units = int(np.prod(p.shape[:-2])) if p.ndim > 2 else 1
+        assert a.shape == (exp_units,)
+        assert ((a >= 0) & (a < n_shards)).all()  # exactly-once, in range
+        m, n = p.shape[-2], p.shape[-1]
+        if plan.side == "right":
+            m, n = n, m
+        c = leaf_unit_cost(m, n, plan.rank, cfg.projector, cfg.power_iters)
+        for s in a:
+            per_shard[s] += c
+            total += c
+            n_units += 1
+    np.testing.assert_allclose(per_shard, loads, rtol=1e-12)
+    if n_units:
+        max_cost = max(
+            leaf_unit_cost(*(p.shape[-2:] if plans[k].side == "left"
+                             else p.shape[-1:-3:-1]),
+                           plans[k].rank, cfg.projector, cfg.power_iters)
+            for k, p in params.items() if plans[k].galore
+        )
+        assert loads.max() <= total / n_shards + max_cost + 1e-6
+    # deterministic: same inputs -> identical assignment
+    assignment2, _ = mgr.partition_refresh(params, None, n_shards)
+    for k in params:
+        np.testing.assert_array_equal(np.asarray(assignment[k]),
+                                      np.asarray(assignment2[k]))
+
+
+@settings(**SETTINGS)
 @given(seed=st.integers(0, 2**16))
 def test_plans_are_stable_across_grads_and_params(seed):
     """plan(params) == plan(grads): structure-only decision."""

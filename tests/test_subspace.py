@@ -205,6 +205,63 @@ def test_partial_external_refresh_matches_inline_stagger():
             )
 
 
+def test_importance_ordered_stagger_offsets():
+    """stagger_by_importance permutes WHICH leaf gets which offset (highest
+    tracked gradient norm refreshes first) but keeps the offset set and the
+    state layout identical."""
+    params = _params()
+    base = GaLoreConfig(rank=16, update_freq=12, refresh_stagger=True)
+    # enumeration order: wide, tall, stack (dict flatten order is sorted)
+    plain = plan_for_params(params, base)
+    assert [plain[k].refresh_offset for k in ("stack", "tall", "wide")] == [0, 4, 8]
+    imp = dataclasses.replace(base, stagger_by_importance=True,
+                              importance_order=("wide", "stack", "tall"))
+    ranked = plan_for_params(params, imp)
+    assert ranked["wide"].refresh_offset == 0  # most important: first
+    assert ranked["stack"].refresh_offset == 4
+    assert ranked["tall"].refresh_offset == 8
+    # same offset SET, and nothing else about the plans moved
+    for k in ("wide", "tall", "stack"):
+        assert ranked[k].rank == plain[k].rank
+        assert ranked[k].refresh_period == plain[k].refresh_period
+    # flag without an order (nothing measured yet) -> enumeration order
+    flag_only = plan_for_params(
+        params, dataclasses.replace(base, stagger_by_importance=True))
+    assert flag_only == plain
+
+
+def test_importance_order_from_grads_sorts_by_norm():
+    from repro.core.subspace import importance_order_from_grads
+
+    grads = {"small": jnp.ones((8, 8)), "big": 100.0 * jnp.ones((8, 8)),
+             "mid": 10.0 * jnp.ones((8, 8)), "bias": jnp.ones((5,))}
+    order = importance_order_from_grads(grads)
+    assert order == ("big", "mid", "small")  # 1-D leaves never ranked
+
+
+def test_partition_refresh_respects_stagger_dueness():
+    """At a concrete step only the due leaves join the work list; the spike
+    (step=None) lists every galore unit, split across shards."""
+    from repro.core.subspace import SubspaceManager
+
+    params = _params()
+    cfg = GaLoreConfig(rank=16, update_freq=12, refresh_stagger=True)
+    mgr = SubspaceManager(cfg)
+    plans = mgr.plans(params)
+    offs = {k: plans[k].refresh_offset for k in ("wide", "tall", "stack")}
+    for step in (4, 8, 16):
+        assignment, loads = mgr.partition_refresh(params, step, 4)
+        for k, off in offs.items():
+            a = np.asarray(assignment[k])
+            due = (step % 12) == off
+            assert (a >= 0).all() == due, (k, step)
+        assert (np.asarray(assignment["bias"]) == -1).all()
+    spike, loads = mgr.partition_refresh(params, None, 4)
+    n_units = sum(int((np.asarray(spike[k]) >= 0).sum()) for k in params)
+    assert n_units == 1 + 1 + 3  # wide, tall, stack(L=3)
+    assert loads.sum() > 0 and (loads > 0).sum() >= 3
+
+
 # ---------------------------------------------------------------------------
 # Adaptive-T
 # ---------------------------------------------------------------------------
