@@ -1,0 +1,100 @@
+"""Benchmark-regression diff: compare two BENCH_*.json record lists.
+
+CI runs a benchmark fresh, then diffs it against the committed baseline and
+uploads the result as an artifact, so a perf regression is visible in one
+file without digging through logs:
+
+    PYTHONPATH=src python -m benchmarks.bench_diff \
+        <baseline.json> <current.json> [--out DIFF.json] [--max-ratio R]
+
+Records are matched on their identity fields (every non-numeric field plus
+the sweep coordinates like n_dp / n_leaves); for each matched pair every
+numeric field gets a current/baseline ratio. Records present on only one
+side are listed under "added" / "removed" rather than failing the diff —
+benchmarks grow rows across PRs. With --max-ratio, exits non-zero if any
+matched *_us timing field regressed by more than R× (timings only: analytic
+cost fields are deterministic and compared exactly at ratio 1.0 elsewhere).
+Wall-clock noise on shared CI runners is real, so the default is report-only.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import numbers
+
+# fields that identify a record rather than measure it
+_ID_HINTS = ("bench", "mode", "backend", "arch", "smoke", "n_dp", "n_leaves",
+             "m", "n", "r", "period", "n_devices", "n_units")
+
+
+def record_key(rec: dict) -> tuple:
+    return tuple(sorted(
+        (k, rec[k]) for k in rec
+        if k in _ID_HINTS or not isinstance(rec[k], numbers.Number)
+        or isinstance(rec[k], bool)
+    ))
+
+
+def diff_records(baseline: list[dict], current: list[dict]) -> dict:
+    base = {record_key(r): r for r in baseline}
+    cur = {record_key(r): r for r in current}
+    matched = []
+    for key in base.keys() & cur.keys():
+        b, c = base[key], cur[key]
+        ratios = {}
+        for f in sorted(b.keys() & c.keys()):
+            bv, cv = b[f], c[f]
+            if (isinstance(bv, numbers.Number) and not isinstance(bv, bool)
+                    and f not in _ID_HINTS):
+                ratios[f] = {"baseline": bv, "current": cv,
+                             "ratio": (cv / bv) if bv else None}
+        matched.append({"key": dict(key), "fields": ratios})
+    return {
+        "matched": sorted(matched, key=lambda m: sorted(m["key"].items())),
+        "added": [cur[k] for k in sorted(cur.keys() - base.keys())],
+        "removed": [base[k] for k in sorted(base.keys() - cur.keys())],
+    }
+
+
+def worst_timing_ratio(diff: dict) -> tuple[float, str]:
+    worst, where = 0.0, ""
+    for m in diff["matched"]:
+        for f, v in m["fields"].items():
+            if f.endswith("_us") and v["ratio"] is not None and v["ratio"] > worst:
+                worst, where = v["ratio"], f"{m['key'].get('mode', '?')}:{f}"
+    return worst, where
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline")
+    ap.add_argument("current")
+    ap.add_argument("--out", default="")
+    ap.add_argument("--max-ratio", type=float, default=0.0,
+                    help="fail if any matched *_us field regressed by more "
+                         "than this factor (0 = report only)")
+    args = ap.parse_args()
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.current) as f:
+        current = json.load(f)
+    diff = diff_records(baseline, current)
+    text = json.dumps(diff, indent=2)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text)
+        print(f"# wrote {args.out}")
+    else:
+        print(text)
+    worst, where = worst_timing_ratio(diff)
+    print(f"# matched={len(diff['matched'])} added={len(diff['added'])} "
+          f"removed={len(diff['removed'])} worst_timing_ratio={worst:.2f}"
+          + (f" ({where})" if where else ""))
+    if args.max_ratio and worst > args.max_ratio:
+        raise SystemExit(
+            f"benchmark regression: {where} = {worst:.2f}x baseline "
+            f"(limit {args.max_ratio}x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -57,6 +57,11 @@ class CheckpointManager:
         # an fp32 layout or vice versa
         meta = {"step": step, "time": time.time(), "dtypes": dtypes,
                 **(extra_meta or {})}
+        if isinstance(tree, dict):
+            # top-level group names, so restore-time callers can build the
+            # right target structure for OPTIONAL groups (e.g. the async
+            # refresh's in-flight "pending" buffer) before reading arrays
+            meta.setdefault("groups", sorted(tree.keys()))
         if self.async_save and not block:
             self.wait()  # never two concurrent saves
             self._thread = threading.Thread(
@@ -105,6 +110,13 @@ class CheckpointManager:
     def meta(self, step: int) -> dict:
         with open(os.path.join(self.root, f"step_{step:08d}", "META.json")) as f:
             return json.load(f)
+
+    def groups(self, step: int) -> tuple:
+        """Top-level keys of the tree saved at `step` (() for pre-groups
+        checkpoints): lets a resume decide whether optional state — the async
+        refresh's in-flight pending buffer — was captured, before committing
+        to a restore target structure."""
+        return tuple(self.meta(step).get("groups", ()))
 
     def restore(self, step: int, target_tree, shardings=None):
         """Restore into the structure of target_tree.

@@ -143,6 +143,16 @@ class GaLoreConfig:
     t_max: int = 0  # adaptive period ceiling; 0 -> 8 * update_freq
     overlap_hi: float = 0.9  # stretch the leaf period when refresh overlap >= hi
     overlap_lo: float = 0.5  # shrink it when overlap < lo
+    # --- async double-buffered refresh (PR 5) ---
+    reproject_moments: bool = False  # ReLoRA-style reset hygiene: on a buffer
+    # swap, rotate the compact Adam moments into the new subspace
+    # (M ← (P_newᵀP_old)M, V ← (P_newᵀP_old)∘²V) instead of silently keeping
+    # statistics accumulated in the old basis. Off by default: the paper (and
+    # the synchronous refresh path) carry moments across refreshes unchanged.
+    unit_costs: tuple = ()  # measured per-shape SVD costs, (((m, n, rank),
+    # seconds), ...) — stamped by the launcher under --galore-calibrate-costs
+    # (core/subspace.py calibrate_unit_costs); static config so every
+    # partition_refresh derivation agrees. Empty -> asymptotic leaf_unit_cost.
     # --- quantized optimizer state (src/repro/quant/) ---
     # All-fp32 default keeps the state layout bit-identical to the unquantized
     # original; resolved into per-leaf SubspacePlan.moments / .proj_store.
@@ -171,6 +181,17 @@ class TrainConfig:
     # data-parallel replicas and all-gather the refreshed projectors (implies
     # external refresh; the per-refresh ceiling drops from Σ c_i to the max
     # bin ≈ Σ c_i / n_dp — see distributed/step.py make_refresh_step)
+    galore_refresh_async: bool = False  # double-buffered async refresh: the
+    # launcher dispatches the refresh program on a STALE gradient snapshot
+    # (previous step's batch) into a pending buffer held OUTSIDE the train
+    # step's input tree, and swaps P_active ← P_next at the next step
+    # boundary — the due-step train launch never waits on SVD completion
+    # (implies external refresh; composes with galore_refresh_shard, where
+    # the refresh gradient is additionally computed per-replica and psum'd
+    # INSIDE the shard_map region). Off: the exact PR 4 program, bit for bit.
+    galore_calibrate_costs: bool = False  # measure per-shape SVD wall time
+    # once at launcher startup and stamp GaLoreConfig.unit_costs so
+    # partition_refresh bins on measured costs instead of the asymptotic model
     galore_fused_adam: bool = False  # single-kernel project→Adam→back per leaf
     # (requires optimizer adam/adamw; see kernels/galore_fused.py)
     galore_fused_apply: bool = False  # fold W ← W + G̃ into the fused-kernel

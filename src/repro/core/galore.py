@@ -52,6 +52,7 @@ from repro.core.subspace import (
     SubspaceManager,
     SubspacePlan,
     _lead,
+    moment_quant_axis,
     proj_shape,
     r_shape,
     rank_axis,
@@ -247,13 +248,9 @@ def _read_proj_tree(ref_tree, proj, plans):
     )
 
 
-def _moment_quant_axis(plan: SubspacePlan) -> int:
-    """Blocked axis of an int8 moment leaf: the fused kernel's swept axis for
-    galore leaves (last on the left, second-to-last on the right), the last
-    axis for full-shape passthrough leaves."""
-    if not plan.galore:
-        return -1
-    return -1 if plan.side == "left" else -2
+# blocked axis of an int8 moment leaf — shared with the async buffer swap's
+# moment re-projection (core/subspace.py, the single source of truth)
+_moment_quant_axis = moment_quant_axis
 
 
 def _managed_adam_init(params, plans):
@@ -479,6 +476,60 @@ def refresh_projectors(grads, galore_state, cfg: GaLoreConfig,
     if sched is not None:
         out["schedule"] = sched
     return out
+
+
+# ---------------------------------------------------------------------------
+# Async double-buffered refresh (P_active / P_next, GaLore-2-style)
+#
+# The pending buffer {"proj", "flag"[, "schedule"]} deliberately lives BESIDE
+# the optimizer state, never inside it: any pending leaf in the train step's
+# input tree is an input-readiness dependency, and XLA would park the due
+# step's train launch behind the SVD program — exactly the stall the async
+# mode exists to remove. The launcher (launch/train.py AsyncRefreshDriver)
+# holds the pending tree between dispatch and the next step boundary, swaps
+# it in with a dedicated tiny program (distributed/step.py make_swap_step),
+# and checkpoints it as its own top-level group when a refresh is in flight
+# (checkpoint/manager.py records the group set in META).
+# ---------------------------------------------------------------------------
+
+
+def init_pending_state(params, cfg: GaLoreConfig, exclude=DEFAULT_EXCLUDE,
+                       param_axes=None) -> dict:
+    """Zero pending buffer matching refresh_projectors_pending's output —
+    the checkpoint restore target for a mid-pending-refresh resume comes
+    from jax.eval_shape of this."""
+    mgr = SubspaceManager(cfg, exclude, param_axes)
+    return mgr.init_pending(params, mgr.plans(params))
+
+
+def refresh_projectors_pending(grads, galore_state, cfg: GaLoreConfig,
+                               exclude=DEFAULT_EXCLUDE, param_axes=None,
+                               step=None, precomputed=None) -> dict:
+    """External refresh written into a pending buffer (async dispatch form).
+
+    Same dueness / key-folding semantics as refresh_projectors, but the
+    active galore_state is untouched: the due leaves' new projectors land in
+    pending["proj"] with pending["flag"] marking them, and the post-refresh
+    adaptive schedule rides along. Swap with swap_pending_state at the next
+    step boundary. `grads` is typically STALE by one step (the launcher
+    snapshots the previous batch), which GaLore 2 shows costs no loss."""
+    mgr = SubspaceManager(cfg, exclude, param_axes)
+    plans = mgr.plans(grads)
+    key = jax.random.fold_in(galore_state["key"], galore_state["step"])
+    sched = galore_state.get("schedule")
+    sched_step = galore_state["step"] if step is None else step
+    return mgr.refresh_pending_tree(
+        grads, galore_state["proj"], sched, plans, key,
+        step=sched_step, force_all=step is None, precomputed=precomputed)
+
+
+def swap_pending_state(params, galore_state, pending, cfg: GaLoreConfig,
+                       exclude=DEFAULT_EXCLUDE, param_axes=None) -> dict:
+    """P_active ← P_next on the flagged leaves (plus schedule scalars and,
+    under cfg.reproject_moments, the ReLoRA-style moment rotation). `params`
+    only supplies leaf shapes — a ShapeDtypeStruct tree works."""
+    mgr = SubspaceManager(cfg, exclude, param_axes)
+    return mgr.swap_pending(galore_state, pending, mgr.plans(params), params)
 
 
 # bytes per element of persistent storage, scale overhead included

@@ -34,6 +34,14 @@ owns all of it:
     holding identical P (bit-identical to the unsharded refresh —
     per-element SVD matches the batched SVD bitwise).
 
+  * init_pending / refresh_pending_tree / swap_pending — the async
+    double-buffered refresh (GaLore 2-style): a refresh pass lands in a
+    PENDING buffer {proj, flag[, schedule]} instead of the active store, and
+    a later swap installs P_active ← P_next on the flagged leaves (with
+    optional ReLoRA-style moment re-projection). The pending tree lives
+    beside the optimizer state, never inside it — see core/galore.py for
+    the input-readiness rationale.
+
 The adaptive policy's per-leaf state ({period, next, overlap} scalars) lives
 inside the galore optimizer state under the "schedule" key, so it checkpoints
 and restores with everything else. When `adaptive_t` is off the key is absent
@@ -74,6 +82,56 @@ def leaf_unit_cost(m: int, n: int, rank: int, method: str = "svd",
         return float(m) * float(n) * float(min(m, n))
     s = min(rank + 8, m, n)
     return float(2 * power_iters + 2) * float(m) * float(n) * float(s)
+
+
+def moment_quant_axis(plan: "SubspacePlan") -> int:
+    """Blocked axis of an int8 moment leaf: the fused kernel's swept axis for
+    galore leaves (last on the left, second-to-last on the right), the last
+    axis for full-shape passthrough leaves."""
+    if not plan.galore:
+        return -1
+    return -1 if plan.side == "left" else -2
+
+
+def calibrate_unit_costs(params, cfg: GaLoreConfig, exclude=DEFAULT_EXCLUDE,
+                         param_axes=None, iters: int = 2) -> tuple:
+    """Measured per-shape refresh cost table for partition_refresh.
+
+    The asymptotic `leaf_unit_cost` model mispredicts relative bin weights on
+    heterogeneous trees (on TPU the randomized sketch passes cost far more
+    than the trailing eigh; on CPU LAPACK's blocking favors square shapes).
+    This times ONE projector compute per distinct post-side-swap
+    (m, n, rank) shape among the galore leaves — random data, jitted, best
+    of `iters` — and returns (((m, n, rank), seconds), ...) for
+    GaLoreConfig.unit_costs. `params` may be a ShapeDtypeStruct tree (the
+    launcher calls this once at startup on the eval_shape of the params)."""
+    import time
+
+    mgr = SubspaceManager(cfg, exclude, param_axes)
+    plans = mgr.plans(params)
+    flat, treedef = jax.tree_util.tree_flatten(params)
+    shapes: dict[tuple, float] = {}
+    for p, plan in zip(flat, treedef.flatten_up_to(plans)):
+        if not plan.galore:
+            continue
+        m, n = p.shape[-2], p.shape[-1]
+        if plan.side == "right":
+            m, n = n, m
+        shapes[(int(m), int(n), int(plan.rank))] = 0.0
+    key = jax.random.PRNGKey(0)
+    for m, n, rank in shapes:
+        G = jax.random.normal(jax.random.fold_in(key, m * 131071 + n), (m, n),
+                              jnp.float32)
+        fn = jax.jit(lambda g, r=rank: compute_projector(
+            g, r, method=cfg.projector, key=key, power_iters=cfg.power_iters))
+        fn(G).block_until_ready()  # compile outside the timed region
+        best = float("inf")
+        for _ in range(max(1, iters)):
+            t0 = time.perf_counter()
+            fn(G).block_until_ready()
+            best = min(best, time.perf_counter() - t0)
+        shapes[(m, n, rank)] = best
+    return tuple(sorted(shapes.items()))
 
 
 def importance_order_from_grads(grads) -> tuple:
@@ -166,6 +224,9 @@ class SubspaceManager:
         self.cfg = cfg
         self.exclude = exclude
         self.param_axes = param_axes
+        # measured (m, n, rank) -> seconds table (calibrate_unit_costs);
+        # empty table falls back to the asymptotic model per shape
+        self._cost_table = {tuple(k): float(v) for k, v in cfg.unit_costs}
 
     # -- policy ------------------------------------------------------------
 
@@ -178,6 +239,16 @@ class SubspaceManager:
         t_min = self.cfg.t_min or max(1, T // 4)
         t_max = self.cfg.t_max or 8 * T
         return t_min, t_max
+
+    def unit_cost(self, m: int, n: int, rank: int) -> float:
+        """Refresh cost of one (m, n) SVD unit: the measured wall time when
+        the launcher calibrated this shape (cfg.unit_costs), else the
+        asymptotic leaf_unit_cost model."""
+        hit = self._cost_table.get((int(m), int(n), int(rank)))
+        if hit is not None:
+            return hit
+        return leaf_unit_cost(m, n, rank, self.cfg.projector,
+                              self.cfg.power_iters)
 
     def leaf_rank(self, path: str, m: int, n: int) -> int:
         for pattern, r in self.cfg.rank_overrides:
@@ -285,7 +356,6 @@ class SubspaceManager:
         force-all (the legacy spike refresh); a non-static step (adaptive-T
         or traced) lists every galore leaf and leaves dueness to the runtime
         conds in refresh_tree."""
-        cfg = self.cfg
         plans = self.plans(params) if plans is None else plans
         flat, treedef = jax.tree_util.tree_flatten_with_path(params)
         plan_flat = treedef.flatten_up_to(plans)
@@ -304,7 +374,7 @@ class SubspaceManager:
             m, n = p.shape[-2], p.shape[-1]
             if plan.side == "right":
                 m, n = n, m
-            cost = leaf_unit_cost(m, n, plan.rank, cfg.projector, cfg.power_iters)
+            cost = self.unit_cost(m, n, plan.rank)
             imp = self.importance_rank(path_str(pth))
             for ei in range(lead):
                 units.append((imp, -cost, li, ei, cost))
@@ -529,3 +599,154 @@ class SubspaceManager:
             "overlap": treedef.unflatten([t[3] for t in flat]),
         }
         return proj_out, sched_out
+
+    # -- async double-buffered refresh (P_active / P_next) -----------------
+
+    def init_pending(self, params, plans) -> dict:
+        """Zero pending buffer: {"proj": P_next storage tree, "flag": per-leaf
+        int32 dueness flags (1 = this refresh recomputed the leaf), plus
+        "schedule" under adaptive-T}. Mirrors refresh_pending_tree's output
+        structure exactly — checkpoint restore targets come from
+        jax.eval_shape of this."""
+        from repro.core.projector import init_projector_state
+
+        def proj_init(p, plan):
+            if not plan.galore:
+                return jnp.zeros((), jnp.float32)
+            return init_projector_state(proj_shape(p, plan), plan.proj_store)
+
+        t = jax.tree_util.tree_map
+        pending = {
+            "proj": t(proj_init, params, plans),
+            "flag": t(lambda p: jnp.zeros((), jnp.int32), params),
+        }
+        sched = self.init_schedule(params, plans)
+        if sched is not None:
+            pending["schedule"] = sched
+        return pending
+
+    def pending_flags(self, params, plans, sched, *, step, force_all=False):
+        """Per-leaf int32 dueness at `step` — the same _leaf_due predicate the
+        refresh itself evaluates, materialized as flags so the swap (and the
+        moment re-projection) know exactly which leaves the pending refresh
+        recomputed. Static decisions lower as constants."""
+        adaptive = sched is not None
+        zero_i = lambda p: jnp.zeros((), jnp.int32)
+        nxt_tree = (sched["next"] if adaptive
+                    else jax.tree_util.tree_map(zero_i, params))
+
+        def leaf(p, plan, nxt):
+            if not plan.galore:
+                return jnp.zeros((), jnp.int32)
+            due = self._leaf_due(plan, nxt, step, force_all, adaptive)
+            return jnp.asarray(due, jnp.int32)
+
+        return jax.tree_util.tree_map(
+            leaf, params, plans, nxt_tree,
+            is_leaf=lambda x: isinstance(x, SubspacePlan))
+
+    def refresh_pending_tree(self, grads, proj, sched, plans, key, *, step,
+                             force_all: bool = False, precomputed=None):
+        """One refresh pass written into the PENDING buffer instead of the
+        active store: P_next for due leaves, the active P passed through
+        elsewhere, plus the dueness flags and (adaptive) the post-refresh
+        schedule. The active buffer is untouched — the caller swaps at the
+        next step boundary (swap_pending)."""
+        proj2, sched2 = self.refresh_tree(
+            grads, proj, sched, plans, key, step=step, force_all=force_all,
+            precomputed=precomputed)
+        pending = {
+            "proj": proj2,
+            "flag": self.pending_flags(grads, plans, sched, step=step,
+                                       force_all=force_all),
+        }
+        if sched2 is not None:
+            pending["schedule"] = sched2
+        return pending
+
+    def swap_pending(self, galore_state, pending, plans, ref_tree):
+        """Buffer swap at a step boundary: P_active ← P_next on every flagged
+        leaf (adaptive schedule scalars ride along), leaving everything else
+        — including "step"/"key" and, by default, the Adam moments — exactly
+        as the synchronous refresh would have.
+
+        cfg.reproject_moments adds the ReLoRA-style reset hygiene: the
+        compact moments of a flagged leaf were accumulated in the OLD basis,
+        so M rotates by Q = P_newᵀ P_old (left side; the mirrored Qᵀ on the
+        right) and the second moment by Q∘Q — the diagonal approximation
+        that keeps V nonnegative. int8 moment leaves dequant → rotate →
+        requant; int4/bf16 projector stores dequant on read for Q only, the
+        stored codes swap verbatim."""
+        cfg = self.cfg
+        flat_ref, treedef = jax.tree_util.tree_flatten(ref_tree)
+        plan_flat = treedef.flatten_up_to(plans)
+        flag_flat = treedef.flatten_up_to(pending["flag"])
+        old_proj = treedef.flatten_up_to(galore_state["proj"])
+        new_proj = treedef.flatten_up_to(pending["proj"])
+
+        def sel(take, new, old):
+            return jax.tree_util.tree_map(
+                lambda n, o: jnp.where(take, n, o), new, old)
+
+        proj_out = []
+        for p, plan, flag, old, new in zip(flat_ref, plan_flat, flag_flat,
+                                           old_proj, new_proj):
+            if not plan.galore:
+                proj_out.append(old)
+                continue
+            proj_out.append(sel(flag > 0, new, old))
+        out = dict(galore_state)
+        out["proj"] = treedef.unflatten(proj_out)
+
+        if "schedule" in galore_state and "schedule" in pending:
+            out["schedule"] = {
+                k: treedef.unflatten([
+                    sel(flag > 0, new, old)
+                    for flag, new, old in zip(
+                        flag_flat,
+                        treedef.flatten_up_to(pending["schedule"][k]),
+                        treedef.flatten_up_to(galore_state["schedule"][k]))
+                ])
+                for k in galore_state["schedule"]
+            }
+
+        inner = galore_state["inner"]
+        if not (cfg.reproject_moments and isinstance(inner, dict)
+                and "m" in inner and "v" in inner):
+            return out
+
+        from repro.core.projector import read_projector
+        from repro.quant import codec
+
+        def rotate(mom, Q, plan, second: bool):
+            """Apply the basis rotation to one compact moment array."""
+            R = jnp.square(Q) if second else Q
+            if plan.side == "left":  # mom (..., r, n): M' = Q M
+                return jnp.einsum("...rs,...sn->...rn", R, mom)
+            return jnp.einsum("...ms,...rs->...mr", mom, R)  # mom (..., m, r)
+
+        def mom_leaf(mom, p, plan, flag, old, new, second):
+            if not plan.galore:
+                return mom
+            P_old = read_projector(old, proj_shape(p, plan))
+            P_new = read_projector(new, proj_shape(p, plan))
+            Q = jnp.einsum("...mr,...ms->...rs", P_new, P_old)
+            take = flag > 0
+            if plan.moments == "int8":
+                ax = moment_quant_axis(plan)
+                m32 = codec.dequant_axis_state(mom, axis=ax, signed=not second)
+                rot = codec.quant_axis_state(rotate(m32, Q, plan, second),
+                                             axis=ax, signed=not second)
+                return sel(take, rot, mom)
+            return jnp.where(take, rotate(mom, Q, plan, second), mom)
+
+        new_inner = dict(inner)
+        for name, second in (("m", False), ("v", True)):
+            new_inner[name] = treedef.unflatten([
+                mom_leaf(mom, p, plan, flag, old, new, second)
+                for mom, p, plan, flag, old, new in zip(
+                    treedef.flatten_up_to(inner[name]), flat_ref, plan_flat,
+                    flag_flat, old_proj, new_proj)
+            ])
+        out["inner"] = new_inner
+        return out

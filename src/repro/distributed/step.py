@@ -166,7 +166,8 @@ def _make_fused_apply_train_step(cfg, tc, rules, opt, loss_of):
     apply_fn = make_fused_apply(
         gcfg, b1=tc.b1, b2=tc.b2, eps=tc.eps, weight_decay=wd,
         param_axes=M.param_axes(cfg),
-        external_refresh=(tc.galore_external_refresh or tc.galore_refresh_shard),
+        external_refresh=(tc.galore_external_refresh or tc.galore_refresh_shard
+                          or tc.galore_refresh_async),
     )
 
     def train_step(params, opt_state, batch):
@@ -186,6 +187,32 @@ def _make_fused_apply_train_step(cfg, tc, rules, opt, loss_of):
         return params2, opt_state2, metrics
 
     return train_step
+
+
+def _dp_shard_index(mesh, dp_axes):
+    """This replica's linear index over the data-parallel mesh axes — the
+    shard id partition_refresh assignments are matched against (must run
+    inside the shard_map region)."""
+    i = jnp.zeros((), jnp.int32)
+    for ax in dp_axes:
+        i = i * mesh.shape[ax] + jax.lax.axis_index(ax)
+    return i
+
+
+def _constrain_gathered_projectors(p_new, gcfg, axes, params):
+    """Land psum-gathered f32 projectors back on the kept-dim mesh axes
+    before the store/epilogue runs as plain GSPMD (shared by the sync and
+    async sharded refresh programs; must run inside a sharding_context)."""
+    from repro.distributed.state_sharding import galore_refresh_gather_axes
+    from repro.utils import is_axes
+
+    p_struct = jax.eval_shape(lambda: params)
+    gather_axes = galore_refresh_gather_axes(gcfg, axes, p_struct)
+    return jax.tree_util.tree_map(
+        lambda ax, x: (logical_constraint(x, *ax)
+                       if is_axes(ax) and len(ax) == x.ndim else x),
+        gather_axes, p_new, is_leaf=is_axes,
+    )
 
 
 def make_refresh_step(cfg: ModelConfig, tc: TrainConfig, rules: Optional[ShardingRules] = None):
@@ -237,12 +264,6 @@ def make_refresh_step(cfg: ModelConfig, tc: TrainConfig, rules: Optional[Shardin
         mgr = SubspaceManager(gcfg, param_axes=axes)
         mesh = rules.mesh
 
-        def shard_index():
-            i = jnp.zeros((), jnp.int32)
-            for ax in dp_axes:
-                i = i * mesh.shape[ax] + jax.lax.axis_index(ax)
-            return i
-
     def refresh_step(params, opt_state, batch, step=None):
         with sharding_context(rules):
             if tc.microbatch and tc.microbatch > 1:
@@ -276,7 +297,7 @@ def make_refresh_step(cfg: ModelConfig, tc: TrainConfig, rules: Optional[Shardin
             return mgr.sharded_projector_tree(
                 g, plans, s.get("schedule"), key, step=eff,
                 force_all=step is None, assignment=assignment,
-                shard_id=shard_index(),
+                shard_id=_dp_shard_index(mesh, dp_axes),
                 axis_name=dp_axes if len(dp_axes) > 1 else dp_axes[0],
             )
 
@@ -290,16 +311,7 @@ def make_refresh_step(cfg: ModelConfig, tc: TrainConfig, rules: Optional[Shardin
             # then run the store / lazy-refresh / adaptive-schedule epilogue
             # as the plain GSPMD program — bit-identical to the unsharded
             # refresh (the parity tests pin this down to the overlap scalars)
-            from repro.distributed.state_sharding import galore_refresh_gather_axes
-            from repro.utils import is_axes
-
-            p_struct = jax.eval_shape(lambda: params)
-            gather_axes = galore_refresh_gather_axes(gcfg, axes, p_struct)
-            p_new = jax.tree_util.tree_map(
-                lambda ax, x: (logical_constraint(x, *ax)
-                               if is_axes(ax) and len(ax) == x.ndim else x),
-                gather_axes, p_new, is_leaf=is_axes,
-            )
+            p_new = _constrain_gathered_projectors(p_new, gcfg, axes, params)
             new_galore = refresh_projectors(
                 grads, galore_state, tc.galore, param_axes=axes, step=step,
                 precomputed=p_new,
@@ -307,6 +319,173 @@ def make_refresh_step(cfg: ModelConfig, tc: TrainConfig, rules: Optional[Shardin
         return opt_state[:idx] + (new_galore,) + opt_state[idx + 1:]
 
     return refresh_step
+
+
+def _batch_dim_index(path) -> int:
+    """Position of the batch dim in a batch-dict leaf (mrope "positions"
+    carry it on dim 1, everything else on dim 0)."""
+    from repro.utils import path_str
+
+    return 1 if "positions" in path_str(path) else 0
+
+
+def _batch_dp_specs(batch, dp_axes):
+    """PartitionSpec tree splitting each batch leaf's batch dim across the
+    data-parallel mesh axes."""
+    from jax.sharding import PartitionSpec as P
+
+    dp = tuple(dp_axes) if len(dp_axes) > 1 else dp_axes[0]
+
+    def spec(path, leaf):
+        parts = [None] * leaf.ndim
+        parts[_batch_dim_index(path)] = dp
+        return P(*parts)
+
+    return jax.tree_util.tree_map_with_path(spec, batch)
+
+
+def make_async_refresh_step(cfg: ModelConfig, tc: TrainConfig,
+                            rules: Optional[ShardingRules] = None):
+    """Async GaLore refresh: computes the PENDING buffer, never the state.
+
+    `refresh_pending(params, galore_sub, batch, step=None) -> pending` where
+    galore_sub is the {"step", "key", "proj"[, "schedule"]} slice of the
+    galore optimizer state — the moments (and the rest of the chain state)
+    never enter this program, so the concurrent train step's input buffers
+    have no dependency on it. The launcher dispatches it on the PREVIOUS
+    step's batch (the stale-gradient snapshot GaLore 2 trains through),
+    keeps the returned futures, and swaps at the next step boundary via
+    make_swap_step. Dueness semantics (step=None force-all / static partial
+    / adaptive traced) match make_refresh_step exactly.
+
+    tc.galore_refresh_shard (and n_dp > 1) composes: the per-unit SVDs are
+    bin-packed across replicas as in PR 4, but — since this program has no
+    bitwise-parity obligation to the synchronous path — the refresh gradient
+    is ALSO computed inside the shard_map region: each replica differentiates
+    the loss on its own batch shard and a psum-mean over the DP axes
+    replaces the replicated full-gradient all-gather that fed the
+    synchronous sharded refresh. (The psum-mean equals the global-batch
+    gradient exactly for uniform loss masks — equal token counts per shard;
+    the refresh gradient only seeds the subspace estimate, so mask-skew
+    noise is immaterial.) The epilogue (store / int4-lazy / adaptive-T)
+    runs outside the manual region as plain GSPMD, as in PR 4."""
+    from repro.core.subspace import SubspaceManager
+    from repro.optim.factory import effective_galore_config
+
+    assert tc.galore is not None
+    gcfg = effective_galore_config(tc)
+    axes = M.param_axes(cfg)
+    mgr = SubspaceManager(gcfg, param_axes=axes)
+
+    sharded = bool(tc.galore_refresh_shard) and rules is not None
+    if sharded:
+        from repro.launch.mesh import data_parallel_axes, data_parallel_size
+
+        dp_axes = data_parallel_axes(rules)
+        n_dp = data_parallel_size(rules)
+        sharded = n_dp > 1 and len(dp_axes) > 0
+    if sharded:
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        mesh = rules.mesh
+
+    def first_microbatch(batch):
+        if tc.microbatch and tc.microbatch > 1:
+            nm = tc.microbatch
+            return jax.tree_util.tree_map(
+                lambda x: x.reshape((nm, x.shape[0] // nm) + x.shape[1:])[0],
+                batch)
+        return batch
+
+    def loss_of(params, batch):
+        return M.loss_fn(cfg, params, batch, z_loss=tc.z_loss)[0]
+
+    def refresh_pending(params, sub, batch, step=None):
+        plans = mgr.plans(params)
+        key = jax.random.fold_in(sub["key"], sub["step"])
+        sched = sub.get("schedule")
+        eff = sub["step"] if step is None else step
+        if not sharded:
+            with sharding_context(rules):
+                grads = jax.grad(loss_of)(params, first_microbatch(batch))
+                return mgr.refresh_pending_tree(
+                    grads, sub["proj"], sched, plans, key,
+                    step=eff, force_all=step is None)
+
+        batch = first_microbatch(batch)
+        flat_b, _ = jax.tree_util.tree_flatten_with_path(batch)
+        for pth, leaf in flat_b:
+            b0 = leaf.shape[_batch_dim_index(pth)]
+            if b0 % n_dp != 0:
+                raise ValueError(
+                    f"async sharded refresh needs the batch ({b0}) divisible "
+                    f"by n_dp ({n_dp}) for the in-region gradient psum")
+        assignment, _ = mgr.partition_refresh(params, step, n_dp, plans=plans)
+
+        # manual region: per-replica batch-shard gradient + psum-mean, then
+        # this replica's SVD units under ownership conds + masked psum gather
+        # (no sharding_context — with_sharding_constraint is illegal here)
+        def body(p, s, b):
+            g = jax.grad(loss_of)(p, b)
+            g = jax.tree_util.tree_map(
+                lambda x: jax.lax.psum(x.astype(jnp.float32), dp_axes) / n_dp,
+                g)
+            k = jax.random.fold_in(s["key"], s["step"])
+            return mgr.sharded_projector_tree(
+                g, plans, s.get("schedule"), k, step=eff,
+                force_all=step is None, assignment=assignment,
+                shard_id=_dp_shard_index(mesh, dp_axes),
+                axis_name=dp_axes if len(dp_axes) > 1 else dp_axes[0],
+            )
+
+        p_new = shard_map(
+            body, mesh=mesh,
+            in_specs=(P(), P(), _batch_dp_specs(batch, dp_axes)),
+            out_specs=P(), check_rep=False,
+        )(params, sub, batch)
+
+        with sharding_context(rules):
+            p_new = _constrain_gathered_projectors(p_new, gcfg, axes, params)
+            # every due leaf's P_new arrives via `precomputed`, so the
+            # epilogue only needs leaf SHAPES from its grads argument —
+            # params stand in for the (never re-materialized) gradient tree
+            return mgr.refresh_pending_tree(
+                params, sub["proj"], sched, plans, key,
+                step=eff, force_all=step is None, precomputed=p_new)
+
+    return refresh_pending
+
+
+def make_swap_step(cfg: ModelConfig, tc: TrainConfig,
+                   rules: Optional[ShardingRules] = None):
+    """Buffer-swap boundary of the async refresh: a tiny jitted program
+    `swap(opt_state, pending) -> opt_state'` installing P_next (and the
+    adaptive schedule scalars) on the flagged leaves — plus, under
+    GaLoreConfig.reproject_moments, the ReLoRA-style rotation of the compact
+    Adam moments into the new basis. This is the only program that consumes
+    the pending futures, so it (not the train step) absorbs any wait for a
+    straggling SVD."""
+    from repro.core.subspace import SubspaceManager
+    from repro.optim.factory import effective_galore_config, galore_state_index
+
+    assert tc.galore is not None
+    gcfg = effective_galore_config(tc)
+    idx = galore_state_index(tc)
+    mgr = SubspaceManager(gcfg, param_axes=M.param_axes(cfg))
+    p_struct = jax.eval_shape(lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+    plans = mgr.plans(p_struct)
+    if gcfg.reproject_moments and tc.optimizer not in ("adam", "adamw", "adam8bit"):
+        raise ValueError(
+            "GaLoreConfig.reproject_moments rotates Adam-shaped {m, v} "
+            f"moments; optimizer {tc.optimizer!r} has no such state")
+
+    def swap_step(opt_state, pending):
+        with sharding_context(rules):
+            g2 = mgr.swap_pending(opt_state[idx], pending, plans, p_struct)
+        return opt_state[:idx] + (g2,) + opt_state[idx + 1:]
+
+    return swap_step
 
 
 def make_prefill_step(cfg: ModelConfig, rules: Optional[ShardingRules] = None):

@@ -63,6 +63,146 @@ def _with_measured_importance(cfg, tc: TrainConfig, params, batch) -> TrainConfi
         tc, galore=dataclasses.replace(tc.galore, importance_order=order))
 
 
+def _with_calibrated_costs(cfg, tc: TrainConfig) -> TrainConfig:
+    """Stamp GaLoreConfig.unit_costs from measured per-shape SVD wall times
+    (one timed projector compute per distinct galore-leaf shape), so
+    partition_refresh bins the distributed refresh on real costs instead of
+    the asymptotic model — static config, measured once at startup."""
+    from repro.core.subspace import calibrate_unit_costs
+
+    p_struct = jax.eval_shape(lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+    costs = calibrate_unit_costs(p_struct, tc.galore, param_axes=M.param_axes(cfg))
+    print(f"[train] calibrated {len(costs)} SVD unit costs: "
+          + ", ".join(f"{k}={v * 1e3:.1f}ms" for k, v in costs))
+    return dataclasses.replace(
+        tc, galore=dataclasses.replace(tc.galore, unit_costs=costs))
+
+
+def _galore_due_offsets(cfg, tc: TrainConfig) -> set:
+    """Host-side set of due phases (refresh_offset % T over the galore
+    leaves) — ONE derivation shared by the sync refresh caller and the async
+    driver, so their host-side dueness can never desynchronize. With K galore
+    leaves only K distinct offsets exist, so every other phase is a
+    statically-known no-op the caller skips without tracing."""
+    from repro.core.subspace import SubspaceManager, SubspacePlan
+    from repro.optim.factory import effective_galore_config
+
+    T = tc.galore.update_freq
+    p_struct = jax.eval_shape(lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+    plans = SubspaceManager(effective_galore_config(tc),
+                            param_axes=M.param_axes(cfg)).plans(p_struct)
+    return {pl.refresh_offset % T for pl in jax.tree_util.tree_leaves(
+        plans, is_leaf=lambda x: isinstance(x, SubspacePlan)) if pl.galore}
+
+
+def _fold_phase(T: int, step: int) -> int:
+    """Fold a concrete step to a due-equivalent window phase: p and T + p are
+    due-equivalent for p != 0, and phase 0 only at the real step 0 — so jit
+    retraces on the static-step refresh programs are bounded by
+    n_galore + 1 distinct values ever."""
+    return 0 if step == 0 else T + step % T
+
+
+class AsyncRefreshDriver:
+    """Launcher-side double-buffered refresh (tc.galore_refresh_async).
+
+    At a due step t the refresh program is DISPATCHED on the previous step's
+    batch (the stale-gradient snapshot) and its result — the pending buffer
+    {"proj", "flag"[, "schedule"]} — is held here as in-flight futures; the
+    train step at t runs on P_active with no data dependency on the SVDs.
+    At the next step boundary a tiny swap program installs P_next. Step 0
+    refreshes synchronously (cold start: the projectors are zeros and there
+    is no previous batch). The pending tree is exposed for checkpointing:
+    a save while a refresh is in flight stores it as its own group, and
+    restore_pending() re-arms the swap so a resumed run lands the identical
+    active buffer."""
+
+    def __init__(self, cfg, tc: TrainConfig, rules):
+        from repro.distributed.step import (
+            make_async_refresh_step,
+            make_refresh_step,
+            make_swap_step,
+        )
+        from repro.optim.factory import galore_state_index
+
+        self.gcfg = tc.galore
+        self.T = self.gcfg.update_freq
+        self.idx = galore_state_index(tc)
+        self.adaptive = bool(self.gcfg.adaptive_t)
+        self.stagger = bool(self.gcfg.refresh_stagger)
+        self.pending = None
+        self._prev_batch = None
+        pend = make_async_refresh_step(cfg, tc, rules)
+        self._dispatch_static = jax.jit(pend, static_argnums=(3,))
+        self._dispatch_traced = jax.jit(pend)
+        # donate the pre-swap opt_state (dead after the call); the pending
+        # tree is NOT donated — its flag scalars and pass-through projector
+        # leaves often cannot alias an output, and the resulting
+        # unusable-donation warnings would fire every swap
+        self._swap = jax.jit(make_swap_step(cfg, tc, rules),
+                             donate_argnums=(0,))
+        cold = make_refresh_step(cfg, tc, rules)
+        self._cold_static = jax.jit(cold, static_argnums=(3,), donate_argnums=(1,))
+        self._cold_traced = jax.jit(cold, donate_argnums=(1,))
+        self._due_offsets = _galore_due_offsets(cfg, tc)
+
+    def _sub(self, opt_state):
+        g = opt_state[self.idx]
+        sub = {"step": g["step"], "key": g["key"], "proj": g["proj"]}
+        if "schedule" in g:
+            sub["schedule"] = g["schedule"]
+        return sub
+
+    def _swap_if_pending(self, opt_state):
+        if self.pending is not None:
+            opt_state = self._swap(opt_state, self.pending)
+            self.pending = None
+        return opt_state
+
+    def restore_pending(self, pending):
+        """Re-arm a checkpointed in-flight refresh: it swaps in at the next
+        maybe_refresh call, exactly where the interrupted run would have."""
+        self.pending = pending
+
+    def prime_stale(self, batch):
+        """Seed the stale-gradient snapshot after a resume: a refresh due on
+        the very first post-resume step must dispatch on the PREVIOUS step's
+        batch, as the uninterrupted run would have (without this it would
+        fall back to the current batch and the trajectories diverge)."""
+        self._prev_batch = batch
+
+    def flush(self, opt_state):
+        """Install any in-flight refresh (end of training / orderly exit)."""
+        return self._swap_if_pending(opt_state)
+
+    def maybe_refresh(self, params, opt_state, batch, step):
+        opt_state = self._swap_if_pending(opt_state)
+        stale = self._prev_batch if self._prev_batch is not None else batch
+        self._prev_batch = batch
+        if step == 0:
+            # synchronous cold start, identical to the sync caller's step 0
+            if self.adaptive:
+                return self._cold_traced(params, opt_state, batch, jnp.int32(0))
+            return self._cold_static(params, opt_state, batch,
+                                     0 if self.stagger else None)
+        if self.adaptive:
+            # dueness is runtime state — dispatch every step, leaves cond
+            self.pending = self._dispatch_traced(
+                params, self._sub(opt_state), stale, jnp.int32(step))
+            return opt_state
+        if self.stagger:
+            if step % self.T in self._due_offsets:
+                # same phase folding as the sync caller: bounded retraces
+                self.pending = self._dispatch_static(
+                    params, self._sub(opt_state), stale,
+                    _fold_phase(self.T, step))
+            return opt_state
+        if step % self.T == 0:
+            self.pending = self._dispatch_static(
+                params, self._sub(opt_state), stale, None)
+        return opt_state
+
+
 def _make_refresh_caller(cfg, tc: TrainConfig, rules):
     """Launcher-side external refresh driver: returns
     maybe_refresh(params, opt_state, batch, step) -> opt_state.
@@ -76,9 +216,6 @@ def _make_refresh_caller(cfg, tc: TrainConfig, rules):
     every-T force-all spike."""
     from repro.distributed.step import make_refresh_step
 
-    from repro.core.subspace import SubspaceManager, SubspacePlan
-    from repro.optim.factory import effective_galore_config
-
     gcfg = tc.galore
     T = gcfg.update_freq
     refresh = make_refresh_step(cfg, tc, rules)
@@ -86,15 +223,11 @@ def _make_refresh_caller(cfg, tc: TrainConfig, rules):
     # refresh never holds two copies of the optimizer state
     jit_static = jax.jit(refresh, static_argnums=(3,), donate_argnums=(1,))
     jit_traced = jax.jit(refresh, donate_argnums=(1,))
-    # host-side due-phase set: with K galore leaves only K distinct offsets
-    # exist, so all other phases are statically known no-ops — skip them
-    # without tracing (T can be 200 with K ≈ 7; tracing 194 identity
-    # programs would dominate startup)
-    p_struct = jax.eval_shape(lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
-    plans = SubspaceManager(effective_galore_config(tc),
-                            param_axes=M.param_axes(cfg)).plans(p_struct)
-    due_offsets = {pl.refresh_offset % T for pl in jax.tree_util.tree_leaves(
-        plans, is_leaf=lambda x: isinstance(x, SubspacePlan)) if pl.galore}
+    # host-side due-phase set (shared derivation with the async driver):
+    # skipping statically-not-due phases without tracing matters because T
+    # can be 200 with K ≈ 7 — tracing 194 identity programs would dominate
+    # startup
+    due_offsets = _galore_due_offsets(cfg, tc)
 
     def maybe_refresh(params, opt_state, batch, step):
         if gcfg.adaptive_t:
@@ -102,10 +235,7 @@ def _make_refresh_caller(cfg, tc: TrainConfig, rules):
         if gcfg.refresh_stagger:
             if step != 0 and step % T not in due_offsets:
                 return opt_state  # statically not due for any leaf
-            # phase p and T + p are due-equivalent for p != 0, and phase 0
-            # only at the real step 0 — at most n_galore + 1 traces ever
-            phase = 0 if step == 0 else T + step % T
-            return jit_static(params, opt_state, batch, phase)
+            return jit_static(params, opt_state, batch, _fold_phase(T, step))
         if step % T == 0:
             return jit_static(params, opt_state, batch, None)
         return opt_state
@@ -136,17 +266,44 @@ def train_loop(run: RunConfig, tc: TrainConfig, cfg=None, on_step=None):
             probe = M.init_params(cfg, key)
             tc = _with_measured_importance(cfg, tc, probe, data.batch(0))
             del probe
+    if gcfg is not None and tc.galore_calibrate_costs and not gcfg.unit_costs:
+        with mesh:
+            tc = _with_calibrated_costs(cfg, tc)
+        gcfg = tc.galore
     external = gcfg is not None and (tc.galore_external_refresh
-                                     or tc.galore_refresh_shard)
+                                     or tc.galore_refresh_shard
+                                     or tc.galore_refresh_async)
     train_step, opt = make_train_step(cfg, tc, rules)
     jitted = jax.jit(train_step, donate_argnums=(0, 1))
-    maybe_refresh = _make_refresh_caller(cfg, tc, rules) if external else None
+    driver = None
+    maybe_refresh = None
+    if external and tc.galore_refresh_async:
+        driver = AsyncRefreshDriver(cfg, tc, rules)
+        maybe_refresh = driver.maybe_refresh
+    elif external:
+        maybe_refresh = _make_refresh_caller(cfg, tc, rules)
     params, opt_state = build_state(cfg, tc, rules, key)
     if latest is not None:
         meta = ckpt.meta(latest)
-        restored = ckpt.restore(latest, {"params": params, "opt_state": opt_state})
+        target = {"params": params, "opt_state": opt_state}
+        if driver is not None and "pending" in ckpt.groups(latest):
+            # a refresh was in flight at save time — restore the pending
+            # buffer and re-arm the swap so the resumed trajectory is the
+            # interrupted one (structure from the zero pending eval_shape)
+            from repro.core.galore import init_pending_state
+            from repro.optim.factory import effective_galore_config
+
+            target["pending"] = jax.eval_shape(
+                lambda: init_pending_state(
+                    params, effective_galore_config(tc),
+                    param_axes=M.param_axes(cfg)))
+        restored = ckpt.restore(latest, target)
         params, opt_state = restored["params"], restored["opt_state"]
+        if "pending" in restored:
+            driver.restore_pending(restored["pending"])
         start_step = meta["step"] + 1
+        if driver is not None and start_step > 0:
+            driver.prime_stale(data.batch(start_step - 1))
         print(f"[train] resumed from step {latest}")
 
     ema_dt = None
@@ -167,13 +324,20 @@ def train_loop(run: RunConfig, tc: TrainConfig, cfg=None, on_step=None):
         if on_step is not None:
             on_step(step, metrics)
         if run.ckpt_every and step > 0 and step % run.ckpt_every == 0:
-            ckpt.save(step, {"params": params, "opt_state": opt_state},
-                      extra_meta={"data": data.state(step)})
+            tree = {"params": params, "opt_state": opt_state}
+            if driver is not None and driver.pending is not None:
+                tree["pending"] = driver.pending  # in-flight refresh rides along
+            ckpt.save(step, tree, extra_meta={"data": data.state(step)})
         if os.path.exists(preempt_flag):
             print(f"[train] preemption signal at step {step}: checkpoint + exit")
-            ckpt.save(step, {"params": params, "opt_state": opt_state}, block=True)
+            tree = {"params": params, "opt_state": opt_state}
+            if driver is not None and driver.pending is not None:
+                tree["pending"] = driver.pending
+            ckpt.save(step, tree, block=True)
             os.remove(preempt_flag)
             return params, opt_state, metrics, step
+    if driver is not None:
+        opt_state = driver.flush(opt_state)
     ckpt.wait()
     return params, opt_state, metrics, run.steps - 1
 
@@ -206,6 +370,21 @@ def main():
                          "replicas and all-gather the projectors (implies "
                          "external refresh; per-refresh ceiling Σc_i → max "
                          "bin ≈ Σc_i/n_dp)")
+    ap.add_argument("--galore-refresh-async", action="store_true",
+                    help="double-buffered async refresh: dispatch the SVD "
+                         "program on the previous step's gradient snapshot "
+                         "and swap P_active <- P_next at the next step "
+                         "boundary, keeping refresh off the train critical "
+                         "path (implies external refresh; composes with "
+                         "--galore-refresh-shard)")
+    ap.add_argument("--galore-reproject-moments", action="store_true",
+                    help="on each async buffer swap, rotate the compact Adam "
+                         "moments into the new subspace (ReLoRA-style reset "
+                         "hygiene) instead of carrying old-basis statistics")
+    ap.add_argument("--galore-calibrate-costs", action="store_true",
+                    help="measure per-shape SVD wall time once at startup "
+                         "and bin-pack the distributed refresh on measured "
+                         "costs instead of the asymptotic model")
     ap.add_argument("--galore-fused-apply", action="store_true",
                     help="fold the weight update into the fused-kernel "
                          "epilogue (requires --galore-fused)")
@@ -235,6 +414,7 @@ def main():
                      refresh_stagger=(args.galore_stagger
                                       or args.galore_stagger_importance),
                      stagger_by_importance=args.galore_stagger_importance,
+                     reproject_moments=args.galore_reproject_moments,
                      quant=QuantPolicy(moments=args.quant_moments,
                                        projectors=args.quant_proj,
                                        lazy_refresh=args.quant_lazy_refresh))
@@ -248,6 +428,12 @@ def main():
     if args.galore_refresh_shard and galore is None:
         ap.error("--galore-refresh-shard requires --galore-rank or "
                  "--galore-rank-frac > 0")
+    if args.galore_refresh_async and galore is None:
+        ap.error("--galore-refresh-async requires --galore-rank or "
+                 "--galore-rank-frac > 0")
+    if args.galore_reproject_moments and not args.galore_refresh_async:
+        ap.error("--galore-reproject-moments acts on async buffer swaps; "
+                 "add --galore-refresh-async")
     tc = TrainConfig(
         optimizer=args.optimizer, galore=galore, lr=args.lr, total_steps=args.steps,
         warmup_steps=max(1, args.steps // 10),
@@ -255,6 +441,8 @@ def main():
         galore_fused_apply=args.galore_fused_apply,
         galore_external_refresh=args.galore_external_refresh,
         galore_refresh_shard=args.galore_refresh_shard,
+        galore_refresh_async=args.galore_refresh_async,
+        galore_calibrate_costs=args.galore_calibrate_costs,
     )
     run = RunConfig(
         arch=args.arch, smoke=not args.full, steps=args.steps,

@@ -87,11 +87,13 @@ def build_optimizer(tc: TrainConfig, param_axes=None) -> GradientTransformation:
             stats = scale_by_adam(tc.b1, tc.b2, tc.eps)
         else:
             stats = _stats_transform(tc)
-        # refresh sharding partitions the SVD work across replicas in a
-        # dedicated step (make_refresh_step), so it implies external refresh
+        # refresh sharding / async double-buffering run the SVD work in a
+        # dedicated program (make_refresh_step / make_async_refresh_step),
+        # so both imply external refresh
         stats = galore(stats, gcfg, param_axes=param_axes,
                        external_refresh=(tc.galore_external_refresh
-                                         or tc.galore_refresh_shard),
+                                         or tc.galore_refresh_shard
+                                         or tc.galore_refresh_async),
                        pre_projected=tc.galore_dp_compress,
                        fused_adam=tc.galore_fused_adam,
                        b1=tc.b1, b2=tc.b2, eps=tc.eps,

@@ -393,3 +393,45 @@ def test_projector_seed_threaded_from_train_config():
         np.testing.assert_array_equal(
             np.asarray(key), np.asarray(jax.random.PRNGKey(seed))
         )
+
+
+# ---------------------------------------------------------------------------
+# Cost-model calibration (--galore-calibrate-costs)
+# ---------------------------------------------------------------------------
+
+
+def test_calibrate_unit_costs_covers_distinct_shapes():
+    from repro.core.subspace import calibrate_unit_costs
+
+    params = _params()
+    cfg = GaLoreConfig(rank=8, update_freq=4)
+    costs = calibrate_unit_costs(params, cfg, iters=1)
+    # one entry per distinct post-side-swap (m, n, rank): wide (48, 130),
+    # tall -> swapped (48, 130), stack (40, 96) — two distinct shapes
+    assert dict(costs).keys() == {(48, 130, 8), (40, 96, 8)}
+    assert all(v > 0 for _, v in costs)
+    # a ShapeDtypeStruct tree works (the launcher calibrates on eval_shape)
+    struct = jax.tree_util.tree_map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), params)
+    costs2 = calibrate_unit_costs(struct, cfg, iters=1)
+    assert dict(costs2).keys() == dict(costs).keys()
+
+
+def test_partition_refresh_bins_on_measured_costs():
+    """A measured table that inverts the asymptotic ordering must invert the
+    bin packing: the shape the table calls expensive gets a bin to itself."""
+    params = _params()
+    base = GaLoreConfig(rank=8, update_freq=4)
+    # asymptotically the (3, 40, 96) stack is 3 units of cost 40*96*40 each,
+    # and wide/tall are 48*130*48 each. Make stack units 100x pricier.
+    table = (((48, 130, 8), 1.0), ((40, 96, 8), 100.0))
+    mgr = SubspaceManager(dataclasses.replace(base, unit_costs=table))
+    assignment, loads = mgr.partition_refresh(params, None, 2)
+    assert loads.sum() == pytest.approx(2 * 1.0 + 3 * 100.0)
+    # LPT on the measured costs: no bin holds all three stack units
+    stack_bins = np.asarray(assignment["stack"])
+    assert len(set(stack_bins.tolist())) == 2
+    # untabulated shapes fall back to the asymptotic model
+    mgr_default = SubspaceManager(base)
+    assert mgr_default.unit_cost(40, 96, 8) == pytest.approx(
+        float(40 * 96 * 40))
