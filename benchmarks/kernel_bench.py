@@ -148,6 +148,33 @@ def bench_leaf(name, L, m, r, n, iters=5):
     return rec
 
 
+def bench_guard_math(n_leaves: int = 8, m: int = 1024, n: int = 2048,
+                     iters: int = 5) -> dict:
+    """Raw anomaly-guard math on a synthetic gradient tree: global grad norm
+    (the only O(params) term) + the scalar EMA/z-score verdict
+    (robust/guard.py). This is the marginal work a guarded step adds on top
+    of the unchanged loss/grad/update programs — the end-to-end ≤3% bar
+    lives in refresh_scaling.bench_guard_overhead."""
+    from repro.robust.guard import global_grad_norm, guard_step
+
+    key = jax.random.PRNGKey(0)
+    grads = {f"leaf{i}": jax.random.normal(jax.random.fold_in(key, i), (m, n))
+             for i in range(n_leaves)}
+    guard = {"mean": jnp.float32(6.0), "var": jnp.float32(0.1),
+             "count": jnp.int32(10), "skips": jnp.int32(0)}
+
+    @jax.jit
+    def guard_math(grads, guard, loss):
+        return guard_step(guard, loss, global_grad_norm(grads),
+                          zmax=6.0, warmup=8, ema=0.9)
+
+    t, _ = time_fn(guard_math, grads, guard, jnp.float32(6.1), iters=iters)
+    rec = {"bench": "guard_math", "n_leaves": n_leaves, "m": m, "n": n,
+           "backend": jax.default_backend(), "guard_math_us": t * 1e6}
+    emit("guard_math", rec["guard_math_us"], f"n_leaves={n_leaves}")
+    return rec
+
+
 def main(quick: bool = False, out: str = "results/BENCH_kernels.json"):
     shapes = LEAF_SHAPES[:2] if quick else LEAF_SHAPES
     records = [bench_leaf(*s, iters=3 if quick else 5) for s in shapes]
@@ -161,6 +188,7 @@ def main(quick: bool = False, out: str = "results/BENCH_kernels.json"):
         rec["fused_tiled_bytes"] = tiled
         pad = tiled / rec["fused_bytes"]
         assert 1.0 <= pad < 1.25, (rec["leaf"], pad, rec)
+    records.append(bench_guard_math(iters=3 if quick else 5))
     # refresh rows route through the scaling harness (one schema for the
     # synchronized spike, the staggered step AND the sharded cost-model
     # ceiling — --quick used to re-time the synchronized micro only)

@@ -329,6 +329,63 @@ def bench_async(arch: str = "llama_60m", smoke: bool = True, n_dp: int = 8,
     return [rec]
 
 
+def bench_guard_overhead(arch: str = "llama_60m", smoke: bool = True,
+                         iters: int = 5, out_pair: tuple | None = None) -> list[dict]:
+    """Anomaly-guard overhead: the full train step with tc.anomaly_guard off
+    vs on (same params/batch; the guarded program adds the loss/grad-norm
+    finiteness checks, the EMA z-score update and the lax.cond no-op gate).
+    The acceptance bar is overhead_ratio ≤ 1.03 — the guard must be cheap
+    enough to leave ON for every production run.
+
+    `out_pair=(off_path, on_path)` additionally writes two single-record
+    files with IDENTICAL identity fields and one `step_us` each, shaped for
+    `benchmarks.bench_diff off on --max-ratio 1.03` — the CI chaos job's
+    machine-checked form of the same bar."""
+    import jax
+
+    from benchmarks.common import time_fn
+    from repro.configs.base import TrainConfig, get_config
+    from repro.distributed.step import make_train_step
+    from repro.launch.mesh import default_rules, make_host_mesh
+    from repro.models import model as M
+    from repro.robust import init_guard_state
+
+    cfg = get_config(arch, smoke=smoke)
+    mesh = make_host_mesh()
+    rules = default_rules(mesh)
+    key = jax.random.PRNGKey(0)
+    toks = jax.random.randint(key, (8, 256), 0, cfg.vocab_size)
+    batch = {"tokens": toks}
+    tc_off = TrainConfig(optimizer="adamw")
+    tc_on = TrainConfig(optimizer="adamw", anomaly_guard=True)
+    with mesh:
+        params = M.init_params(cfg, key)
+        step_off, opt = make_train_step(cfg, tc_off, rules)
+        state = opt.init(params)
+        step_on, _ = make_train_step(cfg, tc_on, rules)
+        guard = init_guard_state()
+        # no donation: the timed calls reuse their inputs across iters
+        t_off, _ = time_fn(jax.jit(step_off), params, state, batch,
+                           iters=iters)
+        t_on, _ = time_fn(jax.jit(step_on), params, state, guard, batch,
+                          iters=iters)
+    rec = refresh_record(
+        "guard", arch=arch, smoke=smoke,
+        step_us=t_off * 1e6, guarded_step_us=t_on * 1e6,
+        overhead_ratio=t_on / t_off,
+    )
+    _emit("guard_step_overhead", rec["guarded_step_us"],
+          f"overhead_ratio={rec['overhead_ratio']:.3f}")
+    if out_pair is not None:
+        ident = {"bench": "guard_step", "arch": arch, "smoke": smoke,
+                 "backend": jax.default_backend()}
+        for path, us in zip(out_pair, (rec["step_us"], rec["guarded_step_us"])):
+            os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+            with open(path, "w") as f:
+                json.dump([{**ident, "step_us": us}], f, indent=2)
+    return [rec]
+
+
 def main(quick: bool = False, out: str = "results/BENCH_refresh.json",
          arch: str = "llama_60m", smoke: bool = True):
     records = bench_sync_vs_staggered(
@@ -340,6 +397,8 @@ def main(quick: bool = False, out: str = "results/BENCH_refresh.json",
                              iters=2 if quick else 3)
     records += bench_async(arch=arch, smoke=smoke, n_dp=8,
                            iters=2 if quick else 3)
+    records += bench_guard_overhead(arch=arch, smoke=smoke,
+                                    iters=3 if quick else 5)
     os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
     with open(out, "w") as f:
         json.dump(records, f, indent=2)
@@ -364,6 +423,9 @@ def main(quick: bool = False, out: str = "results/BENCH_refresh.json",
             assert r["spike_ratio"] <= 0.5, r
     elif not sharded8:
         print("# WARNING: <8 devices — ≥4×/≤0.5× acceptance checks did not run")
+    for r in records:
+        if r["mode"] == "guard":
+            assert r["overhead_ratio"] <= 1.03, r
     return records
 
 
@@ -382,6 +444,10 @@ if __name__ == "__main__":
     ap.add_argument("--arch", default="llama_60m")
     ap.add_argument("--full-arch", action="store_true",
                     help="full-size (non-smoke) model for the cost model")
+    ap.add_argument("--guard-pair", nargs=2, metavar=("OFF", "ON"),
+                    help="run ONLY the guard-overhead bench and write two "
+                         "single-record files (unguarded/guarded step_us, "
+                         "identical identity) for bench_diff --max-ratio")
     ap.add_argument("--no-reexec", action="store_true", help=argparse.SUPPRESS)
     args = ap.parse_args()
     if not args.no_reexec and "xla_force_host_platform_device_count" not in \
@@ -389,5 +455,10 @@ if __name__ == "__main__":
         sys.exit(_reexec_with_devices())
     import jax  # noqa: F401  (device count is fixed by now)
 
-    main(quick=args.quick, out=args.out, arch=args.arch,
-         smoke=not args.full_arch)
+    if args.guard_pair:
+        bench_guard_overhead(arch=args.arch, smoke=not args.full_arch,
+                             iters=3 if args.quick else 5,
+                             out_pair=tuple(args.guard_pair))
+    else:
+        main(quick=args.quick, out=args.out, arch=args.arch,
+             smoke=not args.full_arch)

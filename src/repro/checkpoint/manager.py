@@ -15,14 +15,22 @@ from __future__ import annotations
 
 import json
 import os
+import re
 import shutil
 import threading
 import time
+import zipfile
+import zlib
 
 import jax
 import numpy as np
 
 from repro.utils import path_str
+
+# committed step dirs are exactly step_XXXXXXXX; save tmps are
+# step_XXXXXXXX.tmp_<pid> (never eligible for restore, GC'd on init)
+_STEP_RE = re.compile(r"^step_(\d{8})$")
+_TMP_RE = re.compile(r"^step_\d{8}\.tmp")
 
 
 def _flatten(tree):
@@ -39,12 +47,24 @@ def _flatten(tree):
 
 
 class CheckpointManager:
-    def __init__(self, root: str, keep: int = 3, async_save: bool = True):
+    def __init__(self, root: str, keep: int = 3, async_save: bool = True,
+                 checksum: bool = False):
         self.root = root
         self.keep = keep
         self.async_save = async_save
+        # checksum=True records a per-file crc32 map in META so valid_step can
+        # detect torn/bit-rotted files exactly. Off by default: the META bytes
+        # (and therefore the on-disk layout) stay identical to the unguarded
+        # original; validation then falls back to the npz zip CRC.
+        self.checksum = checksum
         self._thread: threading.Thread | None = None
+        self._save_exc: BaseException | None = None
         os.makedirs(root, exist_ok=True)
+        # GC tmp litter from killed saves: init time is launcher startup, so
+        # no save of THIS root can be concurrently in flight
+        for name in os.listdir(root):
+            if _TMP_RE.match(name):
+                shutil.rmtree(os.path.join(root, name), ignore_errors=True)
 
     # -- save ---------------------------------------------------------------
 
@@ -63,13 +83,22 @@ class CheckpointManager:
             # refresh's in-flight "pending" buffer) before reading arrays
             meta.setdefault("groups", sorted(tree.keys()))
         if self.async_save and not block:
-            self.wait()  # never two concurrent saves
+            self.wait()  # never two concurrent saves; re-raises a prior failure
             self._thread = threading.Thread(
-                target=self._write, args=(step, arrays, meta), daemon=True
+                target=self._write_guarded, args=(step, arrays, meta), daemon=True
             )
             self._thread.start()
         else:
             self._write(step, arrays, meta)
+
+    def _write_guarded(self, step: int, arrays: dict, meta: dict):
+        # daemon-thread body: an exception here would otherwise vanish into
+        # the thread's stderr and the run would keep training while silently
+        # producing no checkpoints — capture it for the next wait()/save()
+        try:
+            self._write(step, arrays, meta)
+        except BaseException as e:  # noqa: BLE001 - surfaced on the main thread
+            self._save_exc = e
 
     def _write(self, step: int, arrays: dict, meta: dict):
         final = os.path.join(self.root, f"step_{step:08d}")
@@ -77,6 +106,13 @@ class CheckpointManager:
         os.makedirs(tmp, exist_ok=True)
         host = getattr(jax, "process_index", lambda: 0)()
         np.savez(os.path.join(tmp, f"host_{host}.npz"), **arrays)
+        if self.checksum:
+            sums = {}
+            for name in sorted(os.listdir(tmp)):
+                if name.endswith(".npz"):
+                    with open(os.path.join(tmp, name), "rb") as f:
+                        sums[name] = zlib.crc32(f.read()) & 0xFFFFFFFF
+            meta = {**meta, "checksums": sums}
         with open(os.path.join(tmp, "META.json"), "w") as f:
             json.dump(meta, f)
         if os.path.exists(final):
@@ -87,6 +123,9 @@ class CheckpointManager:
     def wait(self):
         if self._thread is not None and self._thread.is_alive():
             self._thread.join()
+        if self._save_exc is not None:
+            exc, self._save_exc = self._save_exc, None
+            raise RuntimeError("async checkpoint save failed") from exc
 
     def _gc(self):
         steps = self.all_steps()
@@ -98,14 +137,56 @@ class CheckpointManager:
     def all_steps(self) -> list[int]:
         out = []
         for name in sorted(os.listdir(self.root)):
-            if name.startswith("step_") and not name.endswith(".tmp"):
-                if os.path.exists(os.path.join(self.root, name, "META.json")):
-                    out.append(int(name.split("_")[1]))
+            m = _STEP_RE.match(name)
+            if m and os.path.exists(os.path.join(self.root, name, "META.json")):
+                out.append(int(m.group(1)))
         return sorted(out)
 
     def latest_step(self) -> int | None:
         steps = self.all_steps()
         return steps[-1] if steps else None
+
+    def valid_step(self, step: int) -> bool:
+        """True if the committed checkpoint at `step` passes integrity checks:
+        META parses, at least one host npz exists, and every npz matches its
+        recorded crc32 (or, for checkpoints saved without checksums, the zip's
+        own per-member CRCs — which still catches truncation and bit flips in
+        the compressed payload)."""
+        path = os.path.join(self.root, f"step_{step:08d}")
+        try:
+            meta = self.meta(step)
+        except (FileNotFoundError, json.JSONDecodeError):
+            return False
+        sums = meta.get("checksums")
+        npz = [n for n in sorted(os.listdir(path)) if n.endswith(".npz")]
+        if not npz:
+            return False
+        for name in npz:
+            fpath = os.path.join(path, name)
+            try:
+                if sums is not None:
+                    if name not in sums:
+                        return False
+                    with open(fpath, "rb") as f:
+                        if (zlib.crc32(f.read()) & 0xFFFFFFFF) != sums[name]:
+                            return False
+                else:
+                    with zipfile.ZipFile(fpath) as z:
+                        if z.testzip() is not None:
+                            return False
+            except (OSError, zipfile.BadZipFile):
+                return False
+        return True
+
+    def latest_valid_step(self) -> int | None:
+        """Newest step that passes valid_step — the restore target after a
+        rollback. Walks the committed steps backwards so a corrupted (torn,
+        truncated, bit-rotted) latest checkpoint degrades to the one before
+        it instead of killing the run."""
+        for s in reversed(self.all_steps()):
+            if self.valid_step(s):
+                return s
+        return None
 
     def meta(self, step: int) -> dict:
         with open(os.path.join(self.root, f"step_{step:08d}", "META.json")) as f:

@@ -153,6 +153,14 @@ class GaLoreConfig:
     # seconds), ...) — stamped by the launcher under --galore-calibrate-costs
     # (core/subspace.py calibrate_unit_costs); static config so every
     # partition_refresh derivation agrees. Empty -> asymptotic leaf_unit_cost.
+    # --- poison-proof refresh (src/repro/robust/) ---
+    guard_refresh: bool = False  # validate the refresh inputs and outputs:
+    # a non-finite gradient snapshot makes the refresh a no-op for every leaf
+    # (flags cleared, P_active kept — the leaf retries next period), an SVD
+    # that fails to converge (non-finite P) falls back to the randomized
+    # projector, and swap_pending rejects non-finite/degenerate P_next
+    # per leaf. Off by default: the refresh/swap programs are bit-identical
+    # to the unguarded originals.
     # --- quantized optimizer state (src/repro/quant/) ---
     # All-fp32 default keeps the state layout bit-identical to the unquantized
     # original; resolved into per-leaf SubspacePlan.moments / .proj_store.
@@ -198,6 +206,32 @@ class TrainConfig:
     # epilogue (requires galore_fused_adam; drops the full-size f32 update
     # write — the two-step chain path remains the numerics oracle)
     z_loss: float = 0.0
+    # --- fault tolerance (src/repro/robust/) -------------------------------
+    anomaly_guard: bool = False  # per-step anomaly guard inside the train
+    # step: finiteness check on loss + global grad norm plus a running
+    # loss-spike z-score monitor; a tripped guard makes the step a no-op
+    # (params/opt_state passed through unchanged via lax.cond, skip counter
+    # incremented) instead of applying a poisoned update. Changes the step
+    # signature to (params, opt_state, guard, batch) — off by default, and
+    # off means the exact original program, bit for bit.
+    guard_zmax: float = 6.0  # trip when (loss - EMA mean) / EMA std > zmax
+    guard_warmup: int = 8  # guarded steps before the z-score monitor arms
+    # (the EMA needs samples; finiteness checks are active from step 0)
+    guard_ema: float = 0.9  # decay of the running loss mean/variance EMAs
+    fault_hooks: bool = False  # thread deterministic fault-injection inputs
+    # ({"loss_add", "grad_scale"} scalars) through the train step — the
+    # testing/chaos-CI path (robust/faults.py); never set in production
+    # --- escalating recovery (launch/train.py) -----------------------------
+    recover_max_skips: int = 3  # K consecutive guard skips escalate to an
+    # automatic rollback to the newest VALID checkpoint
+    recover_max_rollbacks: int = 2  # bounded retries before hard failure
+    recover_backoff: float = 0.0  # seconds slept per accumulated rollback
+    # before resuming (real clusters use minutes; tests use 0)
+    recover_lr_decay: float = 1.0  # <1: multiply lr by this on every rollback
+    # (the restarted trajectory re-jits with the decayed schedule)
+    recover_resync: bool = False  # after a rollback, force one synchronous
+    # force-all subspace refresh on the restored state (ReLoRA-style reset
+    # hygiene — composes with galore.reproject_moments)
 
 
 # ---------------------------------------------------------------------------

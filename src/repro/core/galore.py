@@ -56,6 +56,7 @@ from repro.core.subspace import (
     proj_shape,
     r_shape,
     rank_axis,
+    tree_all_finite,
 )
 from repro.optim.transform import GradientTransformation
 from repro.quant import codec
@@ -185,8 +186,10 @@ def galore(
             proj = state["proj"]
         else:
             key = jax.random.fold_in(state["key"], step)
+            valid = tree_all_finite(grads) if cfg.guard_refresh else None
             proj, sched = mgr.refresh_tree(
-                grads, state["proj"], sched, plans, key, step=step
+                grads, state["proj"], sched, plans, key, step=step,
+                valid=valid,
             )
 
         # persistent P may be stored bf16 / packed int4 — dequantize once per
@@ -418,8 +421,10 @@ def make_fused_apply(cfg: GaLoreConfig, *, b1: float, b2: float, eps: float,
             proj = galore_state["proj"]
         else:
             key = jax.random.fold_in(galore_state["key"], step)
+            valid = tree_all_finite(grads) if cfg.guard_refresh else None
             proj, sched = mgr.refresh_tree(
-                grads, galore_state["proj"], sched, plans, key, step=step)
+                grads, galore_state["proj"], sched, plans, key, step=step,
+                valid=valid)
         proj32 = _read_proj_tree(grads, proj, plans)
         new_params, inner_state = _managed_adam_update(
             grads, proj32, galore_state["inner"], plans, cfg, b1, b2, eps,
@@ -441,7 +446,7 @@ def make_fused_apply(cfg: GaLoreConfig, *, b1: float, b2: float, eps: float,
 def refresh_projectors(grads, galore_state, cfg: GaLoreConfig,
                        exclude=DEFAULT_EXCLUDE, param_axes=None, step=None,
                        assignment=None, shard_id=None, axis_name=None,
-                       precomputed=None):
+                       precomputed=None, valid=None):
     """External projector refresh (the launcher-driven path).
 
     step=None recomputes EVERY projector from `grads` — the legacy every-T
@@ -457,20 +462,29 @@ def refresh_projectors(grads, galore_state, cfg: GaLoreConfig,
     `axis_name`. Alternatively pass `precomputed` (a sharded_projector_tree
     output gathered in a separate shard_map region, the make_refresh_step
     pattern) so this epilogue lowers as the plain GSPMD program and stays
-    bit-identical to the unsharded refresh. Defaults touch nothing."""
+    bit-identical to the unsharded refresh. Defaults touch nothing.
+
+    Under cfg.guard_refresh the gradient snapshot is validated before any
+    SVD: `valid` (a scalar bool) gates every leaf's dueness; when None it is
+    computed here as tree_all_finite(grads) — pass it explicitly when
+    `grads` is a stand-in tree (the async sharded epilogue)."""
     mgr = SubspaceManager(cfg, exclude, param_axes)
     plans = mgr.plans(grads)
     key = jax.random.fold_in(galore_state["key"], galore_state["step"])
     sched = galore_state.get("schedule")
     sched_step = galore_state["step"] if step is None else step
+    if cfg.guard_refresh and valid is None:
+        valid = tree_all_finite(grads)
     if assignment is not None:
         precomputed = mgr.sharded_projector_tree(
             grads, plans, sched, key, step=sched_step, force_all=step is None,
             assignment=assignment, shard_id=shard_id, axis_name=axis_name,
+            valid=valid,
         )
     proj, sched = mgr.refresh_tree(
         grads, galore_state["proj"], sched, plans, key,
         step=sched_step, force_all=step is None, precomputed=precomputed,
+        valid=valid,
     )
     out = {**galore_state, "proj": proj}
     if sched is not None:
@@ -504,7 +518,7 @@ def init_pending_state(params, cfg: GaLoreConfig, exclude=DEFAULT_EXCLUDE,
 
 def refresh_projectors_pending(grads, galore_state, cfg: GaLoreConfig,
                                exclude=DEFAULT_EXCLUDE, param_axes=None,
-                               step=None, precomputed=None) -> dict:
+                               step=None, precomputed=None, valid=None) -> dict:
     """External refresh written into a pending buffer (async dispatch form).
 
     Same dueness / key-folding semantics as refresh_projectors, but the
@@ -512,15 +526,22 @@ def refresh_projectors_pending(grads, galore_state, cfg: GaLoreConfig,
     pending["proj"] with pending["flag"] marking them, and the post-refresh
     adaptive schedule rides along. Swap with swap_pending_state at the next
     step boundary. `grads` is typically STALE by one step (the launcher
-    snapshots the previous batch), which GaLore 2 shows costs no loss."""
+    snapshots the previous batch), which GaLore 2 shows costs no loss — and
+    is exactly the snapshot cfg.guard_refresh validates (`valid` auto-
+    computed as tree_all_finite(grads) when not supplied): a non-finite
+    snapshot yields an all-zero-flag pending buffer instead of a poisoned
+    P_next."""
     mgr = SubspaceManager(cfg, exclude, param_axes)
     plans = mgr.plans(grads)
     key = jax.random.fold_in(galore_state["key"], galore_state["step"])
     sched = galore_state.get("schedule")
     sched_step = galore_state["step"] if step is None else step
+    if cfg.guard_refresh and valid is None:
+        valid = tree_all_finite(grads)
     return mgr.refresh_pending_tree(
         grads, galore_state["proj"], sched, plans, key,
-        step=sched_step, force_all=step is None, precomputed=precomputed)
+        step=sched_step, force_all=step is None, precomputed=precomputed,
+        valid=valid)
 
 
 def swap_pending_state(params, galore_state, pending, cfg: GaLoreConfig,

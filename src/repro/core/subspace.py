@@ -202,9 +202,49 @@ def subspace_overlap_mean(P: jnp.ndarray, P_ref: jnp.ndarray) -> jnp.ndarray:
     return jnp.mean(subspace_overlap(P, P_ref))
 
 
+def tree_all_finite(tree) -> jnp.ndarray:
+    """Scalar bool: every element of every float leaf is finite. The
+    poison-proof refresh (GaLoreConfig.guard_refresh) evaluates this on the
+    (stale) gradient snapshot before any SVD runs — one non-finite leaf makes
+    the WHOLE refresh a no-op (a single global verdict keeps the pending
+    flags and projectors consistent across leaves and, under the sharded
+    refresh, across replicas)."""
+    checks = [
+        jnp.all(jnp.isfinite(l))
+        for l in jax.tree_util.tree_leaves(tree)
+        if hasattr(l, "dtype") and jnp.issubdtype(l.dtype, jnp.floating)
+    ]
+    if not checks:
+        return jnp.asarray(True)
+    out = checks[0]
+    for c in checks[1:]:
+        out = jnp.logical_and(out, c)
+    return out
+
+
+def projector_or_fallback(P_primary, G_in, rank: int, key, power_iters: int,
+                          axes=(None, None)):
+    """P_primary when finite, else the randomized-sketch projector of G_in.
+
+    LAPACK/XLA SVD signals non-convergence by returning NaN, not by raising
+    — without this gate a single failed decomposition poisons P for every
+    step until the next refresh. The fallback runs under the `lax.cond`, so
+    the healthy path never pays for it. (A genuinely non-finite G makes the
+    fallback NaN too; that case is caught upstream by the tree_all_finite
+    snapshot gate and downstream by swap_pending's validation.)"""
+    return jax.lax.cond(
+        jnp.all(jnp.isfinite(P_primary)),
+        lambda: P_primary,
+        lambda: compute_projector(G_in, rank, method="randomized", key=key,
+                                  power_iters=power_iters, axes=axes),
+    )
+
+
 def compute_leaf_projector(g, plan: SubspacePlan, cfg: GaLoreConfig, key):
     """Top-rank subspace of one leaf's gradient, using the plan's rank and
-    the sharding-aware projector backend from core/projector.py."""
+    the sharding-aware projector backend from core/projector.py. Under
+    cfg.guard_refresh the exact-SVD method gets the randomized fallback on
+    non-convergence (projector_or_fallback)."""
     if plan.side == "left":
         G_in, am, an = g, plan.ax_m, plan.ax_n
     else:
@@ -214,6 +254,9 @@ def compute_leaf_projector(g, plan: SubspacePlan, cfg: GaLoreConfig, key):
         G_in, plan.rank, method=cfg.projector, key=key,
         power_iters=cfg.power_iters, axes=(am, an),
     )
+    if cfg.guard_refresh and cfg.projector == "svd":
+        P_new = projector_or_fallback(P_new, G_in, plan.rank, key,
+                                      cfg.power_iters, axes=(am, an))
     return logical_constraint(P_new, *_lead(P_new, am, None))
 
 
@@ -427,7 +470,7 @@ class SubspaceManager:
 
     def sharded_projector_tree(self, grads, plans, sched, key, *, step,
                                force_all: bool = False, assignment=None,
-                               shard_id=None, axis_name=None):
+                               shard_id=None, axis_name=None, valid=None):
         """Distributed projector compute: masked per-unit SVDs + psum gather.
 
         Must run inside `shard_map` over the `axis_name` mesh axes:
@@ -446,7 +489,12 @@ class SubspaceManager:
         adaptive-schedule epilogue lowers as the exact same GSPMD program as
         the unsharded refresh (keeping even the overlap scalars bit-identical;
         an epilogue inside the manual region reduces its einsums in a
-        different order and drifts in the last float bits)."""
+        different order and drifts in the last float bits).
+
+        `valid`: optional scalar bool (guard_refresh) — False suppresses
+        every SVD launch, so a poisoned gradient snapshot costs nothing and
+        the gathered tree is all zeros (the epilogue's matching `valid` gate
+        then keeps the active projectors)."""
         cfg = self.cfg
         adaptive = sched is not None
         nxt_tree = (sched["next"] if adaptive else
@@ -475,6 +523,8 @@ class SubspaceManager:
                 mine = shard_id == owner
                 if rt_due is not None:
                     mine = jnp.logical_and(mine, rt_due)
+                if valid is not None:
+                    mine = jnp.logical_and(mine, valid)
                 outs.append(jax.lax.cond(
                     mine,
                     lambda gi=g2[i]: compute_leaf_projector(gi, plan, cfg, key),
@@ -496,7 +546,7 @@ class SubspaceManager:
         return treedef.unflatten(flat)
 
     def refresh_tree(self, grads, proj, sched, plans, key, *, step,
-                     force_all: bool = False, precomputed=None):
+                     force_all: bool = False, precomputed=None, valid=None):
         """One refresh pass over every leaf; returns (proj', sched').
 
         force_all=True recomputes every galore projector unconditionally (the
@@ -510,6 +560,12 @@ class SubspaceManager:
         gathered f32 P_new use it instead of computing the SVD here, so the
         expensive projector math can be partitioned across replicas while
         this epilogue stays the unsharded program bit for bit.
+
+        valid: optional scalar bool (guard_refresh, tree_all_finite of the
+        gradient snapshot) ANDed into every leaf's dueness — False turns the
+        whole pass into a no-op (projectors AND schedule untouched), so the
+        leaf simply retries at its next due phase. None (the default) keeps
+        the unguarded program exactly.
         """
         cfg = self.cfg
         adaptive = sched is not None
@@ -562,6 +618,10 @@ class SubspaceManager:
             # a scalar placeholder means "not in this refresh's work list"
             pc = None if (pc is None or pc.ndim == 0) else pc
             due = self._leaf_due(plan, nxt, step, force_all, adaptive)
+            if valid is not None and due is not False:
+                # the snapshot-validity gate turns even statically-due leaves
+                # into runtime conds — only reachable under guard_refresh
+                due = jnp.logical_and(jnp.asarray(due), valid)
             if isinstance(due, bool):  # static decision (Python-int step)
                 if not due:
                     return old
@@ -625,11 +685,14 @@ class SubspaceManager:
             pending["schedule"] = sched
         return pending
 
-    def pending_flags(self, params, plans, sched, *, step, force_all=False):
+    def pending_flags(self, params, plans, sched, *, step, force_all=False,
+                      valid=None):
         """Per-leaf int32 dueness at `step` — the same _leaf_due predicate the
         refresh itself evaluates, materialized as flags so the swap (and the
         moment re-projection) know exactly which leaves the pending refresh
-        recomputed. Static decisions lower as constants."""
+        recomputed. Static decisions lower as constants. `valid` is the same
+        snapshot-validity scalar the refresh gated on — ANDed in so the
+        flags can never claim a leaf the invalidated refresh skipped."""
         adaptive = sched is not None
         zero_i = lambda p: jnp.zeros((), jnp.int32)
         nxt_tree = (sched["next"] if adaptive
@@ -639,6 +702,8 @@ class SubspaceManager:
             if not plan.galore:
                 return jnp.zeros((), jnp.int32)
             due = self._leaf_due(plan, nxt, step, force_all, adaptive)
+            if valid is not None and due is not False:
+                due = jnp.logical_and(jnp.asarray(due), valid)
             return jnp.asarray(due, jnp.int32)
 
         return jax.tree_util.tree_map(
@@ -646,19 +711,23 @@ class SubspaceManager:
             is_leaf=lambda x: isinstance(x, SubspacePlan))
 
     def refresh_pending_tree(self, grads, proj, sched, plans, key, *, step,
-                             force_all: bool = False, precomputed=None):
+                             force_all: bool = False, precomputed=None,
+                             valid=None):
         """One refresh pass written into the PENDING buffer instead of the
         active store: P_next for due leaves, the active P passed through
         elsewhere, plus the dueness flags and (adaptive) the post-refresh
         schedule. The active buffer is untouched — the caller swaps at the
-        next step boundary (swap_pending)."""
+        next step boundary (swap_pending). `valid` (guard_refresh) gates the
+        refresh AND the flags with one verdict, so a poisoned stale-gradient
+        snapshot produces an all-zero-flag pending buffer whose swap is a
+        no-op."""
         proj2, sched2 = self.refresh_tree(
             grads, proj, sched, plans, key, step=step, force_all=force_all,
-            precomputed=precomputed)
+            precomputed=precomputed, valid=valid)
         pending = {
             "proj": proj2,
             "flag": self.pending_flags(grads, plans, sched, step=step,
-                                       force_all=force_all),
+                                       force_all=force_all, valid=valid),
         }
         if sched2 is not None:
             pending["schedule"] = sched2
@@ -688,22 +757,39 @@ class SubspaceManager:
             return jax.tree_util.tree_map(
                 lambda n, o: jnp.where(take, n, o), new, old)
 
+        # cfg.guard_refresh: the last line of the poison-proof refresh — a
+        # flagged leaf's P_next must be finite AND non-degenerate (nonzero)
+        # or the swap rejects it per leaf: P_active, schedule scalars and
+        # moments all stay put and the leaf retries at its next due phase
+        # (under adaptive-T the rejected leaf's un-advanced "next" keeps it
+        # due immediately). ONE `take` verdict per leaf drives projector,
+        # schedule and moment selection, so the three can never desync.
+        takes = []
         proj_out = []
         for p, plan, flag, old, new in zip(flat_ref, plan_flat, flag_flat,
                                            old_proj, new_proj):
             if not plan.galore:
+                takes.append(False)
                 proj_out.append(old)
                 continue
-            proj_out.append(sel(flag > 0, new, old))
+            take = flag > 0
+            if cfg.guard_refresh:
+                P_new32 = read_projector(new, proj_shape(p, plan))
+                healthy = jnp.logical_and(
+                    jnp.all(jnp.isfinite(P_new32)),
+                    jnp.sum(jnp.abs(P_new32)) > 0)
+                take = jnp.logical_and(take, healthy)
+            takes.append(take)
+            proj_out.append(sel(take, new, old))
         out = dict(galore_state)
         out["proj"] = treedef.unflatten(proj_out)
 
         if "schedule" in galore_state and "schedule" in pending:
             out["schedule"] = {
                 k: treedef.unflatten([
-                    sel(flag > 0, new, old)
-                    for flag, new, old in zip(
-                        flag_flat,
+                    sel(take, new, old)
+                    for take, new, old in zip(
+                        takes,
                         treedef.flatten_up_to(pending["schedule"][k]),
                         treedef.flatten_up_to(galore_state["schedule"][k]))
                 ])
@@ -715,7 +801,6 @@ class SubspaceManager:
                 and "m" in inner and "v" in inner):
             return out
 
-        from repro.core.projector import read_projector
         from repro.quant import codec
 
         def rotate(mom, Q, plan, second: bool):
@@ -725,13 +810,12 @@ class SubspaceManager:
                 return jnp.einsum("...rs,...sn->...rn", R, mom)
             return jnp.einsum("...ms,...rs->...mr", mom, R)  # mom (..., m, r)
 
-        def mom_leaf(mom, p, plan, flag, old, new, second):
+        def mom_leaf(mom, p, plan, take, old, new, second):
             if not plan.galore:
                 return mom
             P_old = read_projector(old, proj_shape(p, plan))
             P_new = read_projector(new, proj_shape(p, plan))
             Q = jnp.einsum("...mr,...ms->...rs", P_new, P_old)
-            take = flag > 0
             if plan.moments == "int8":
                 ax = moment_quant_axis(plan)
                 m32 = codec.dequant_axis_state(mom, axis=ax, signed=not second)
@@ -743,10 +827,10 @@ class SubspaceManager:
         new_inner = dict(inner)
         for name, second in (("m", False), ("v", True)):
             new_inner[name] = treedef.unflatten([
-                mom_leaf(mom, p, plan, flag, old, new, second)
-                for mom, p, plan, flag, old, new in zip(
+                mom_leaf(mom, p, plan, take, old, new, second)
+                for mom, p, plan, take, old, new in zip(
                     treedef.flatten_up_to(inner[name]), flat_ref, plan_flat,
-                    flag_flat, old_proj, new_proj)
+                    takes, old_proj, new_proj)
             ])
         out["inner"] = new_inner
         return out

@@ -32,6 +32,14 @@ def make_train_step(cfg: ModelConfig, tc: TrainConfig, rules: Optional[ShardingR
     def loss_of(params, batch):
         return M.loss_fn(cfg, params, batch, z_loss=tc.z_loss)
 
+    if tc.anomaly_guard:
+        if tc.galore_dp_compress or tc.galore_fused_apply:
+            raise ValueError(
+                "anomaly_guard wraps the default/chain train step; the "
+                "galore_dp_compress and galore_fused_apply fast paths have "
+                "no guarded variant yet")
+        return _make_guarded_train_step(cfg, tc, rules, opt, loss_of), opt
+
     if tc.galore_dp_compress:
         return _make_compressed_train_step(cfg, tc, rules, opt, loss_of), opt
 
@@ -43,39 +51,93 @@ def make_train_step(cfg: ModelConfig, tc: TrainConfig, rules: Optional[ShardingR
 
     def train_step(params, opt_state, batch):
         with sharding_context(rules):
-            if tc.microbatch and tc.microbatch > 1:
-                # gradient accumulation: split the global batch on the leading dim
-                nm = tc.microbatch
-
-                def micro(b):
-                    return jax.tree_util.tree_map(
-                        lambda x: x.reshape((nm, x.shape[0] // nm) + x.shape[1:]), b
-                    )
-
-                mb = micro(batch)
-
-                def acc(carry, b):
-                    g_acc, loss_acc = carry
-                    (loss, metrics), g = jax.value_and_grad(loss_of, has_aux=True)(params, b)
-                    g_acc = jax.tree_util.tree_map(
-                        lambda a, x: a + x.astype(jnp.float32) / nm, g_acc, g
-                    )
-                    return (g_acc, loss_acc + loss / nm), None
-
-                zeros = jax.tree_util.tree_map(
-                    lambda p: jnp.zeros(p.shape, jnp.float32), params
-                )
-                (grads, loss), _ = jax.lax.scan(acc, (zeros, 0.0), mb)
-                metrics = {"loss": loss}
-            else:
-                (loss, metrics), grads = jax.value_and_grad(loss_of, has_aux=True)(
-                    params, batch
-                )
+            _, metrics, grads = _grads_and_loss(tc, loss_of, params, batch)
             updates, opt_state = opt.update(grads, opt_state, params)
             params = apply_updates(params, updates)
         return params, opt_state, metrics
 
     return train_step, opt
+
+
+def _grads_and_loss(tc, loss_of, params, batch):
+    """The default path's loss/grad computation (microbatch scan included),
+    shared with the guarded step so the two can never drift numerically."""
+    if tc.microbatch and tc.microbatch > 1:
+        nm = tc.microbatch
+
+        def micro(b):
+            return jax.tree_util.tree_map(
+                lambda x: x.reshape((nm, x.shape[0] // nm) + x.shape[1:]), b
+            )
+
+        mb = micro(batch)
+
+        def acc(carry, b):
+            g_acc, loss_acc = carry
+            (loss, metrics), g = jax.value_and_grad(loss_of, has_aux=True)(params, b)
+            g_acc = jax.tree_util.tree_map(
+                lambda a, x: a + x.astype(jnp.float32) / nm, g_acc, g
+            )
+            return (g_acc, loss_acc + loss / nm), None
+
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+        (grads, loss), _ = jax.lax.scan(acc, (zeros, 0.0), mb)
+        return loss, {"loss": loss}, grads
+    (loss, metrics), grads = jax.value_and_grad(loss_of, has_aux=True)(
+        params, batch
+    )
+    return loss, metrics, grads
+
+
+def _make_guarded_train_step(cfg, tc, rules, opt, loss_of):
+    """Anomaly-guarded train step (tc.anomaly_guard, src/repro/robust/):
+
+        train_step(params, opt_state, guard, batch[, fault])
+            -> (params', opt_state', guard', metrics)
+
+    After the (unchanged) loss/grad computation the guard checks loss and
+    global grad norm for finiteness plus the running loss-spike z-score; the
+    optimizer update + weight apply run under a `lax.cond` on the verdict,
+    so a tripped guard passes params, moments AND schedule counters through
+    untouched — the step is a true no-op and the trajectory stays exactly
+    where it was. Metrics gain "guard_ok" (this step's verdict) and
+    "guard_skips" (monotone skip total) for the launcher's escalation
+    policy. tc.fault_hooks additionally threads the identity-default fault
+    scalars ({"loss_add", "grad_scale"}, robust/faults.py) through the
+    program — the chaos-test path; `loss_add` perturbs only the loss VALUE
+    (zero gradient), `grad_scale` only the gradients."""
+    from repro.robust.guard import global_grad_norm, guard_step
+
+    use_faults = bool(tc.fault_hooks)
+
+    def train_step(params, opt_state, guard, batch, fault=None):
+        with sharding_context(rules):
+            loss, metrics, grads = _grads_and_loss(tc, loss_of, params, batch)
+            if use_faults:
+                loss = loss + fault["loss_add"]
+                grads = jax.tree_util.tree_map(
+                    lambda g: g * fault["grad_scale"].astype(g.dtype), grads)
+            ok, guard = guard_step(
+                guard, loss, global_grad_norm(grads),
+                zmax=tc.guard_zmax, warmup=tc.guard_warmup, ema=tc.guard_ema)
+
+            def do_update(_):
+                updates, opt2 = opt.update(grads, opt_state, params)
+                return apply_updates(params, updates), opt2
+
+            def skip(_):
+                return params, opt_state
+
+            params2, opt_state2 = jax.lax.cond(ok, do_update, skip, operand=None)
+            metrics = dict(metrics)
+            metrics["loss"] = loss
+            metrics["guard_ok"] = ok.astype(jnp.int32)
+            metrics["guard_skips"] = guard["skips"]
+        return params2, opt_state2, guard, metrics
+
+    return train_step
 
 
 def _make_compressed_train_step(cfg, tc, rules, opt, loss_of):
@@ -291,14 +353,22 @@ def make_refresh_step(cfg: ModelConfig, tc: TrainConfig, rules: Optional[Shardin
             sub["schedule"] = galore_state["schedule"]
 
         def body(g, s):
+            from repro.core.subspace import tree_all_finite
+
             plans = mgr.plans(g)
             key = jax.random.fold_in(s["key"], s["step"])
             eff = s["step"] if step is None else step
+            # guard_refresh: one global snapshot-validity verdict computed on
+            # the replicated gradient — False suppresses every replica's SVD
+            # launches (the epilogue recomputes the same scalar to gate the
+            # store, so the two can never disagree)
+            valid = tree_all_finite(g) if gcfg.guard_refresh else None
             return mgr.sharded_projector_tree(
                 g, plans, s.get("schedule"), key, step=eff,
                 force_all=step is None, assignment=assignment,
                 shard_id=_dp_shard_index(mesh, dp_axes),
                 axis_name=dp_axes if len(dp_axes) > 1 else dp_axes[0],
+                valid=valid,
             )
 
         p_new = shard_map(
@@ -402,6 +472,8 @@ def make_async_refresh_step(cfg: ModelConfig, tc: TrainConfig,
         return M.loss_fn(cfg, params, batch, z_loss=tc.z_loss)[0]
 
     def refresh_pending(params, sub, batch, step=None):
+        from repro.core.subspace import tree_all_finite
+
         plans = mgr.plans(params)
         key = jax.random.fold_in(sub["key"], sub["step"])
         sched = sub.get("schedule")
@@ -409,9 +481,14 @@ def make_async_refresh_step(cfg: ModelConfig, tc: TrainConfig,
         if not sharded:
             with sharding_context(rules):
                 grads = jax.grad(loss_of)(params, first_microbatch(batch))
+                # guard_refresh: validate the stale-gradient snapshot BEFORE
+                # any SVD — one non-finite leaf zeroes every dueness flag, so
+                # the eventual swap is a no-op and the leaves retry next
+                # period on a fresh snapshot
+                valid = tree_all_finite(grads) if gcfg.guard_refresh else None
                 return mgr.refresh_pending_tree(
                     grads, sub["proj"], sched, plans, key,
-                    step=eff, force_all=step is None)
+                    step=eff, force_all=step is None, valid=valid)
 
         batch = first_microbatch(batch)
         flat_b, _ = jax.tree_util.tree_flatten_with_path(batch)
@@ -432,27 +509,39 @@ def make_async_refresh_step(cfg: ModelConfig, tc: TrainConfig,
                 lambda x: jax.lax.psum(x.astype(jnp.float32), dp_axes) / n_dp,
                 g)
             k = jax.random.fold_in(s["key"], s["step"])
-            return mgr.sharded_projector_tree(
+            # guard_refresh: the snapshot-validity verdict must be computed
+            # HERE — the psum-mean gradient never leaves the manual region
+            # (the epilogue sees params standing in for grads), so the scalar
+            # is returned alongside the gathered projectors
+            valid = tree_all_finite(g) if gcfg.guard_refresh else None
+            p_new = mgr.sharded_projector_tree(
                 g, plans, s.get("schedule"), k, step=eff,
                 force_all=step is None, assignment=assignment,
                 shard_id=_dp_shard_index(mesh, dp_axes),
                 axis_name=dp_axes if len(dp_axes) > 1 else dp_axes[0],
+                valid=valid,
             )
+            return (p_new, valid) if gcfg.guard_refresh else p_new
 
-        p_new = shard_map(
+        out = shard_map(
             body, mesh=mesh,
             in_specs=(P(), P(), _batch_dp_specs(batch, dp_axes)),
-            out_specs=P(), check_rep=False,
+            out_specs=(P(), P()) if gcfg.guard_refresh else P(),
+            check_rep=False,
         )(params, sub, batch)
+        p_new, valid = out if gcfg.guard_refresh else (out, None)
 
         with sharding_context(rules):
             p_new = _constrain_gathered_projectors(p_new, gcfg, axes, params)
             # every due leaf's P_new arrives via `precomputed`, so the
             # epilogue only needs leaf SHAPES from its grads argument —
             # params stand in for the (never re-materialized) gradient tree
+            # (which is why `valid` must come from the manual region above,
+            # never be recomputed from the stand-in)
             return mgr.refresh_pending_tree(
                 params, sub["proj"], sched, plans, key,
-                step=eff, force_all=step is None, precomputed=p_new)
+                step=eff, force_all=step is None, precomputed=p_new,
+                valid=valid)
 
     return refresh_pending
 

@@ -243,7 +243,15 @@ def _make_refresh_caller(cfg, tc: TrainConfig, rules):
     return maybe_refresh
 
 
-def train_loop(run: RunConfig, tc: TrainConfig, cfg=None, on_step=None):
+def train_loop(run: RunConfig, tc: TrainConfig, cfg=None, on_step=None,
+               faults=None):
+    """Run the training loop; returns (params, opt_state, metrics, last_step).
+
+    `faults`: optional fault-injection specs (strings "kind@step[*count]" or
+    FaultSpec objects, robust/faults.py) — deterministic corruption for the
+    chaos tests and the CI chaos job. Traced kinds require tc.anomaly_guard
+    (they poison the loss/grads INSIDE the step; without the guard nothing
+    would stop the poison from entering the weights)."""
     cfg = cfg or get_config(run.arch, smoke=run.smoke)
     mesh = mesh_lib.make_host_mesh()
     rules = mesh_lib.default_rules(mesh)
@@ -255,10 +263,22 @@ def train_loop(run: RunConfig, tc: TrainConfig, cfg=None, on_step=None):
             seed=tc.seed,
         )
     )
-    ckpt = CheckpointManager(run.ckpt_dir)
+    guarded = bool(tc.anomaly_guard)
+    injector = None
+    if faults:
+        from repro.robust import FaultInjector, FaultSpec, parse_fault
 
-    start_step = 0
-    latest = ckpt.latest_step()
+        specs = [f if isinstance(f, FaultSpec) else parse_fault(f) for f in faults]
+        injector = FaultInjector(specs)
+        if injector.needs_traced_hooks:
+            if not guarded:
+                raise ValueError("traced fault kinds require tc.anomaly_guard")
+            if not tc.fault_hooks:
+                tc = dataclasses.replace(tc, fault_hooks=True)
+    # checksum only when guarded: the recovery path needs exact corruption
+    # detection; unguarded runs keep the original META bytes
+    ckpt = CheckpointManager(run.ckpt_dir, checksum=guarded)
+
     key = jax.random.PRNGKey(tc.seed)
     gcfg = tc.galore
     if gcfg is not None and gcfg.stagger_by_importance and not gcfg.importance_order:
@@ -273,20 +293,53 @@ def train_loop(run: RunConfig, tc: TrainConfig, cfg=None, on_step=None):
     external = gcfg is not None and (tc.galore_external_refresh
                                      or tc.galore_refresh_shard
                                      or tc.galore_refresh_async)
-    train_step, opt = make_train_step(cfg, tc, rules)
-    jitted = jax.jit(train_step, donate_argnums=(0, 1))
-    driver = None
-    maybe_refresh = None
-    if external and tc.galore_refresh_async:
-        driver = AsyncRefreshDriver(cfg, tc, rules)
-        maybe_refresh = driver.maybe_refresh
-    elif external:
-        maybe_refresh = _make_refresh_caller(cfg, tc, rules)
+
+    def build_programs(tc_eff):
+        """(Re)build every jitted program for an effective config — called
+        once at startup and again on a rollback that decays the LR."""
+        train_step, opt = make_train_step(cfg, tc_eff, rules)
+        jitted = jax.jit(train_step, donate_argnums=(0, 1))
+        driver = None
+        maybe_refresh = None
+        if external and tc_eff.galore_refresh_async:
+            driver = AsyncRefreshDriver(cfg, tc_eff, rules)
+            maybe_refresh = driver.maybe_refresh
+        elif external:
+            maybe_refresh = _make_refresh_caller(cfg, tc_eff, rules)
+        resync = None
+        if (guarded and tc_eff.recover_resync and maybe_refresh is not None
+                and not tc_eff.galore.adaptive_t):
+            # post-rollback re-sync: one synchronous force-all refresh so the
+            # restored run starts from projectors of ITS OWN gradients instead
+            # of whatever the checkpoint carried (phase 0 == cold start ==
+            # every leaf due; adaptive-T owns its schedule, skip there)
+            from repro.distributed.step import make_refresh_step
+
+            resync = jax.jit(make_refresh_step(cfg, tc_eff, rules),
+                             static_argnums=(3,))
+        return opt, jitted, driver, maybe_refresh, resync
+
+    tc_eff = tc
+    opt, jitted, driver, maybe_refresh, resync = build_programs(tc_eff)
     params, opt_state = build_state(cfg, tc, rules, key)
-    if latest is not None:
-        meta = ckpt.meta(latest)
+    guard = None
+    recov = None
+    if guarded:
+        from repro.robust import RecoveryController, init_guard_state
+
+        guard = init_guard_state()
+        recov = RecoveryController(max_skips=tc.recover_max_skips,
+                                   max_rollbacks=tc.recover_max_rollbacks,
+                                   backoff=tc.recover_backoff)
+
+    def try_restore(params, opt_state, guard, driver, which):
+        """Restore params/opt_state (+ optional pending/guard groups) from
+        checkpoint `which`; returns the new (params, opt_state, guard,
+        start_step). Shared by startup resume and rollback."""
+        meta = ckpt.meta(which)
+        groups = ckpt.groups(which)
         target = {"params": params, "opt_state": opt_state}
-        if driver is not None and "pending" in ckpt.groups(latest):
+        if driver is not None and "pending" in groups:
             # a refresh was in flight at save time — restore the pending
             # buffer and re-arm the swap so the resumed trajectory is the
             # interrupted one (structure from the zero pending eval_shape)
@@ -297,24 +350,94 @@ def train_loop(run: RunConfig, tc: TrainConfig, cfg=None, on_step=None):
                 lambda: init_pending_state(
                     params, effective_galore_config(tc),
                     param_axes=M.param_axes(cfg)))
-        restored = ckpt.restore(latest, target)
+        if guarded and "guard" in groups:
+            target["guard"] = guard
+        restored = ckpt.restore(which, target)
         params, opt_state = restored["params"], restored["opt_state"]
         if "pending" in restored:
             driver.restore_pending(restored["pending"])
-        start_step = meta["step"] + 1
-        if driver is not None and start_step > 0:
-            driver.prime_stale(data.batch(start_step - 1))
+        if "guard" in restored:
+            guard = restored["guard"]
+        start = meta["step"] + 1
+        if driver is not None and start > 0:
+            driver.prime_stale(data.batch(start - 1))
+        return params, opt_state, guard, start
+
+    start_step = 0
+    # guarded runs only trust checkpoints that pass integrity validation —
+    # a torn/corrupted latest degrades to the one before it
+    latest = ckpt.latest_valid_step() if guarded else ckpt.latest_step()
+    if latest is not None:
+        params, opt_state, guard, start_step = try_restore(
+            params, opt_state, guard, driver, latest)
         print(f"[train] resumed from step {latest}")
 
     ema_dt = None
     metrics = {}
     preempt_flag = os.path.join(run.ckpt_dir, "PREEMPT")
-    for step in range(start_step, run.steps):
+    step = start_step
+    while step < run.steps:
         t0 = time.time()
         batch = data.batch(step)
         if maybe_refresh is not None:
             opt_state = maybe_refresh(params, opt_state, batch, step)
-        params, opt_state, metrics = jitted(params, opt_state, batch)
+            if (injector is not None and driver is not None
+                    and driver.pending is not None
+                    and injector.take("corrupt_pending", step)):
+                print(f"[faults] poisoning in-flight pending buffer at step {step}")
+                driver.pending = injector.poison_pending(driver.pending)
+        if guarded:
+            if tc.fault_hooks:
+                from repro.robust import identity_fault
+
+                fault = (injector.traced_fault(step) if injector is not None
+                         else identity_fault())
+                params, opt_state, guard, metrics = jitted(
+                    params, opt_state, guard, batch, fault)
+            else:
+                params, opt_state, guard, metrics = jitted(
+                    params, opt_state, guard, batch)
+            ok = bool(metrics["guard_ok"])
+            if not ok:
+                print(f"[guard] anomalous step {step}: update skipped "
+                      f"(total skips {int(metrics['guard_skips'])})")
+        else:
+            ok = True
+            params, opt_state, metrics = jitted(params, opt_state, batch)
+        if recov is not None and recov.observe_step(ok):
+            n = recov.start_rollback()
+            ckpt.wait()  # let an in-flight save commit before choosing a target
+            if tc.recover_lr_decay < 1.0:
+                tc_eff = dataclasses.replace(
+                    tc_eff, lr=tc_eff.lr * tc.recover_lr_decay)
+                opt, jitted, driver, maybe_refresh, resync = build_programs(tc_eff)
+            elif driver is not None:
+                driver.pending = None  # an in-flight refresh may be the poison
+                driver._prev_batch = None
+            params, opt_state = build_state(cfg, tc_eff, rules, key)
+            from repro.robust import init_guard_state
+
+            # the guard's running stats only absorb ACCEPTED steps, so the
+            # checkpointed monitor is clean by construction — restoring it
+            # keeps the z-score armed across the rollback (a fresh one would
+            # be blind to spikes for another full warmup)
+            guard = init_guard_state()
+            which = ckpt.latest_valid_step()
+            if which is not None:
+                params, opt_state, guard, step = try_restore(
+                    params, opt_state, guard, driver, which)
+            else:
+                step = 0  # nothing valid on disk — restart from init
+            print(f"[recover] rollback {n}/{tc.recover_max_rollbacks}: "
+                  f"restored step {which}, resuming at step {step}"
+                  + (f", lr -> {tc_eff.lr:.2e}" if tc.recover_lr_decay < 1.0 else ""))
+            if resync is not None:
+                opt_state = resync(
+                    params, opt_state, data.batch(step),
+                    0 if tc_eff.galore.refresh_stagger else None)
+                if driver is not None:
+                    driver.prime_stale(data.batch(step))
+            continue  # re-enter the loop at the restored step
         dt = time.time() - t0
         ema_dt = dt if ema_dt is None else 0.9 * ema_dt + 0.1 * dt
         if dt > 2.0 * ema_dt and step > start_step + 3:
@@ -327,15 +450,29 @@ def train_loop(run: RunConfig, tc: TrainConfig, cfg=None, on_step=None):
             tree = {"params": params, "opt_state": opt_state}
             if driver is not None and driver.pending is not None:
                 tree["pending"] = driver.pending  # in-flight refresh rides along
+            if guarded:
+                tree["guard"] = guard  # monitor stats resume with the run
             ckpt.save(step, tree, extra_meta={"data": data.state(step)})
+            if injector is not None:
+                if injector.take("corrupt_ckpt", step):
+                    ckpt.wait()  # corrupt the COMMITTED files, not the tmp
+                    print(f"[faults] corrupting latest checkpoint after step {step}")
+                    injector.corrupt_latest(run.ckpt_dir)
+                if injector.take("kill_save", step):
+                    ckpt.wait()
+                    print(f"[faults] simulating kill mid-save at step {step}")
+                    injector.leave_stale_tmp(run.ckpt_dir, step)
         if os.path.exists(preempt_flag):
             print(f"[train] preemption signal at step {step}: checkpoint + exit")
             tree = {"params": params, "opt_state": opt_state}
             if driver is not None and driver.pending is not None:
                 tree["pending"] = driver.pending
+            if guarded:
+                tree["guard"] = guard
             ckpt.save(step, tree, block=True)
             os.remove(preempt_flag)
             return params, opt_state, metrics, step
+        step += 1
     if driver is not None:
         opt_state = driver.flush(opt_state)
     ckpt.wait()
@@ -398,10 +535,32 @@ def main():
     ap.add_argument("--quant-lazy-refresh", action="store_true",
                     help="int4 projectors: skip committing refreshes that "
                          "leave the quantized codes unchanged")
+    ap.add_argument("--anomaly-guard", action="store_true",
+                    help="per-step anomaly guard: non-finite loss/grad-norm "
+                         "or an EMA z-score loss spike turns the step into a "
+                         "no-op; with GaLore also validates refresh inputs "
+                         "and pending-projector swaps (guard_refresh)")
+    ap.add_argument("--inject-fault", action="append", default=[],
+                    metavar="KIND@STEP[*N]",
+                    help="deterministic fault injection (repeatable): traced "
+                         "kinds nan_loss/inf_loss/spike_loss/nan_grad "
+                         "(require --anomaly-guard), host kinds "
+                         "corrupt_pending/corrupt_ckpt/kill_save")
+    ap.add_argument("--recover-max-skips", type=int, default=3,
+                    help="consecutive guard skips before rolling back to the "
+                         "newest valid checkpoint")
+    ap.add_argument("--recover-max-rollbacks", type=int, default=2,
+                    help="rollback budget before hard TrainingFailure")
+    ap.add_argument("--recover-lr-decay", type=float, default=1.0,
+                    help="multiply LR by this on each rollback (<1 enables)")
+    ap.add_argument("--recover-resync", action="store_true",
+                    help="after a rollback, force one synchronous force-all "
+                         "projector refresh before resuming")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args()
 
@@ -434,6 +593,20 @@ def main():
     if args.galore_reproject_moments and not args.galore_refresh_async:
         ap.error("--galore-reproject-moments acts on async buffer swaps; "
                  "add --galore-refresh-async")
+    from repro.robust import TRACED_KINDS, parse_fault
+
+    try:
+        faults = [parse_fault(s) for s in args.inject_fault]
+    except ValueError as e:
+        ap.error(str(e))
+    traced = any(f.kind in TRACED_KINDS for f in faults)
+    if traced and not args.anomaly_guard:
+        ap.error("traced fault kinds (nan_loss/inf_loss/spike_loss/nan_grad) "
+                 "poison the step from inside — they require --anomaly-guard")
+    if galore is not None and args.anomaly_guard:
+        # the guard implies poison-proof refresh: validate stale-gradient
+        # snapshots, SVD outputs, and pending swaps
+        galore = dataclasses.replace(galore, guard_refresh=True)
     tc = TrainConfig(
         optimizer=args.optimizer, galore=galore, lr=args.lr, total_steps=args.steps,
         warmup_steps=max(1, args.steps // 10),
@@ -443,13 +616,19 @@ def main():
         galore_refresh_shard=args.galore_refresh_shard,
         galore_refresh_async=args.galore_refresh_async,
         galore_calibrate_costs=args.galore_calibrate_costs,
+        anomaly_guard=args.anomaly_guard,
+        fault_hooks=traced,
+        recover_max_skips=args.recover_max_skips,
+        recover_max_rollbacks=args.recover_max_rollbacks,
+        recover_lr_decay=args.recover_lr_decay,
+        recover_resync=args.recover_resync,
     )
     run = RunConfig(
         arch=args.arch, smoke=not args.full, steps=args.steps,
         batch_per_host=args.batch, seq_len=args.seq, ckpt_dir=args.ckpt_dir,
-        log_every=args.log_every,
+        ckpt_every=args.ckpt_every, log_every=args.log_every,
     )
-    train_loop(run, tc)
+    train_loop(run, tc, faults=faults or None)
 
 
 if __name__ == "__main__":

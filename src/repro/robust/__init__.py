@@ -1,0 +1,33 @@
+"""Fault-tolerance subsystem: anomaly guard, fault injection, recovery.
+
+Three cooperating layers, all default-off (TrainConfig.anomaly_guard /
+GaLoreConfig.guard_refresh; with the flags off every program, state tree and
+checkpoint byte is identical to the unguarded stack):
+
+  * guard.py    — the in-step anomaly guard: finiteness checks on loss and
+                  global gradient norm plus a running loss-spike z-score
+                  monitor, all computed in-region so they shard for free.
+                  A tripped guard makes the step a no-op via `lax.cond`.
+  * faults.py   — deterministic fault injection for tests and the CI chaos
+                  job: traced hooks (NaN/Inf/spiked loss, NaN gradients)
+                  threaded through the guarded step, plus host-side faults
+                  (poisoned pending projector, corrupted checkpoint files,
+                  kill-mid-save tmp litter).
+  * recovery.py — the launcher-side escalation policy: K consecutive guard
+                  skips trigger a rollback to the newest VALID checkpoint,
+                  with bounded retries and backoff before hard failure.
+
+The poison-proof refresh validation itself lives where the refresh lives
+(core/subspace.py, gated by GaLoreConfig.guard_refresh); this package holds
+the step-level and launcher-level machinery.
+"""
+from repro.robust.faults import (  # noqa: F401
+    FaultInjector,
+    FaultSpec,
+    HOST_KINDS,
+    TRACED_KINDS,
+    identity_fault,
+    parse_fault,
+)
+from repro.robust.guard import guard_step, init_guard_state  # noqa: F401
+from repro.robust.recovery import RecoveryController, TrainingFailure  # noqa: F401

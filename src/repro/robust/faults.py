@@ -1,0 +1,165 @@
+"""Deterministic fault injection: the chaos harness behind the recovery tests.
+
+Two families of fault, both specified as `kind@step` (or `kind@step*count`
+for a fault that persists `count` consecutive steps — what it takes to drive
+the escalation policy past its consecutive-skip threshold):
+
+  TRACED faults ride INSIDE the jitted train step as identity-default scalar
+  inputs ({"loss_add": 0, "grad_scale": 1}; TrainConfig.fault_hooks threads
+  them through). `loss_add` perturbs the loss VALUE after the gradient is
+  taken (a constant has zero gradient), so nan_loss/inf_loss/spike_loss
+  exercise the loss-side guard with finite gradients; `grad_scale` poisons
+  every gradient leaf while the loss stays finite, exercising the grad-norm
+  check — and, on an async-refresh snapshot step, the poison-proof refresh
+  validation.
+
+  HOST faults corrupt launcher-side state between steps: the in-flight
+  pending projector buffer (corrupt_pending), the newest on-disk checkpoint
+  (corrupt_ckpt — truncates its npz so checksum/zip validation fails and
+  restore must walk back), and a kill mid-save (kill_save — leaves a stale
+  `step_XXXXXXXX.tmp_<pid>` directory for init-time GC to collect).
+
+Injection is deterministic and fire-once per (spec, step-window): two runs
+with the same specs see byte-identical faults, which is what lets the tests
+assert recovered-vs-fault-free loss parity.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+TRACED_KINDS = ("nan_loss", "inf_loss", "spike_loss", "nan_grad")
+HOST_KINDS = ("corrupt_pending", "corrupt_ckpt", "kill_save")
+
+_SPIKE = 1.0e4  # spike_loss offset: astronomically outside any EMA band
+
+_SPEC_RE = re.compile(r"^([a-z_]+)@(\d+)(?:\*(\d+))?$")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    kind: str
+    step: int
+    count: int = 1  # traced faults fire on steps [step, step + count)
+
+
+def parse_fault(spec: str) -> FaultSpec:
+    """'nan_loss@3' / 'spike_loss@12*4' -> FaultSpec (CLI --inject-fault)."""
+    m = _SPEC_RE.match(spec.strip())
+    if not m:
+        raise ValueError(
+            f"bad fault spec {spec!r}: expected kind@step or kind@step*count")
+    kind, step, count = m.group(1), int(m.group(2)), int(m.group(3) or 1)
+    if kind not in TRACED_KINDS + HOST_KINDS:
+        raise ValueError(
+            f"unknown fault kind {kind!r}: "
+            f"traced {TRACED_KINDS}, host-side {HOST_KINDS}")
+    return FaultSpec(kind, step, count)
+
+
+def identity_fault() -> dict:
+    """The no-fault traced input: adding 0 to the loss and scaling gradients
+    by 1 is the identity, so a fault-hooked program with this input computes
+    the exact unfaulted update."""
+    return {"loss_add": jnp.zeros((), jnp.float32),
+            "grad_scale": jnp.ones((), jnp.float32)}
+
+
+class FaultInjector:
+    """Holds the parsed specs and answers 'what breaks at step N?'."""
+
+    def __init__(self, specs):
+        self.specs = [parse_fault(s) if isinstance(s, str) else s
+                      for s in (specs or [])]
+        self._fired: set[int] = set()  # host-side specs consumed (by index)
+        self._injected: set[tuple] = set()  # traced (spec idx, step) consumed
+
+    @property
+    def needs_traced_hooks(self) -> bool:
+        return any(s.kind in TRACED_KINDS for s in self.specs)
+
+    def traced_fault(self, step: int) -> dict:
+        """The step's traced-input dict (identity when nothing is due).
+
+        Each (spec, step) fires ONCE ever: traced faults model transient
+        corruption (an SDC, a flipped bit), so when a rollback replays the
+        faulted step the replay is clean and recovery can actually converge —
+        a persistent `*count` window keeps poisoning the count NEXT un-fired
+        steps after each replay, which is what exhausts the rollback budget
+        in the hard-failure tests."""
+        fault = identity_fault()
+        for i, s in enumerate(self.specs):
+            if s.kind not in TRACED_KINDS or not (s.step <= step < s.step + s.count):
+                continue
+            if (i, step) in self._injected:
+                continue
+            self._injected.add((i, step))
+            if s.kind == "nan_loss":
+                fault["loss_add"] = jnp.full((), jnp.nan, jnp.float32)
+            elif s.kind == "inf_loss":
+                fault["loss_add"] = jnp.full((), jnp.inf, jnp.float32)
+            elif s.kind == "spike_loss":
+                fault["loss_add"] = jnp.full((), _SPIKE, jnp.float32)
+            elif s.kind == "nan_grad":
+                fault["grad_scale"] = jnp.full((), jnp.nan, jnp.float32)
+        return fault
+
+    def take(self, kind: str, step: int) -> bool:
+        """Fire-once host-side trigger: True the first time `step` reaches a
+        matching spec's step (callers gate on their own preconditions, e.g.
+        corrupt_pending only fires while a refresh is actually in flight)."""
+        for i, s in enumerate(self.specs):
+            if s.kind == kind and i not in self._fired and step >= s.step:
+                self._fired.add(i)
+                return True
+        return False
+
+    # -- host-side corruption ------------------------------------------------
+
+    @staticmethod
+    def poison_pending(pending: dict) -> dict:
+        """NaN every float array in the pending projector buffer (the flags
+        are kept, so the next swap sees flagged-but-poisoned P_next — exactly
+        what guard_refresh's swap validation must reject)."""
+        def leaf(x):
+            if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating) \
+                    and getattr(x, "ndim", 0) > 0:
+                return jnp.full_like(x, jnp.nan)
+            return x
+
+        return {"proj": jax.tree_util.tree_map(leaf, pending["proj"]),
+                **{k: v for k, v in pending.items() if k != "proj"}}
+
+    @staticmethod
+    def corrupt_latest(ckpt_root: str) -> str | None:
+        """Truncate the newest committed checkpoint's npz mid-file — the
+        classic torn write. Returns the mangled path (None if no target)."""
+        steps = sorted(
+            int(m.group(1)) for m in
+            (re.fullmatch(r"step_(\d{8})", n) for n in os.listdir(ckpt_root))
+            if m)
+        for s in reversed(steps):
+            d = os.path.join(ckpt_root, f"step_{s:08d}")
+            for name in sorted(os.listdir(d)):
+                if name.endswith(".npz"):
+                    path = os.path.join(d, name)
+                    size = os.path.getsize(path)
+                    with open(path, "r+b") as f:
+                        f.truncate(max(1, size // 2))
+                    return path
+        return None
+
+    @staticmethod
+    def leave_stale_tmp(ckpt_root: str, step: int) -> str:
+        """Simulate a kill mid-save: a partially-written tmp dir with the
+        real naming scheme (step_XXXXXXXX.tmp_<pid>) and no META commit
+        marker — what CheckpointManager must both ignore and GC."""
+        tmp = os.path.join(ckpt_root, f"step_{step:08d}.tmp_{os.getpid()}")
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, "host_0.npz"), partial=np.zeros(3))
+        return tmp

@@ -1,0 +1,82 @@
+"""Per-step anomaly guard: finiteness + loss-spike z-score, inside the jit.
+
+The guard runs IN-REGION (distributed/step.py threads it through the train
+step), so its reductions shard exactly like the loss and gradient math — at
+pod scale the finiteness checks cost one all-reduce that overlaps with the
+existing global-norm clip. The verdict feeds a `lax.cond` around the
+optimizer update: a tripped guard passes params, moments and schedule state
+through untouched, so one poisoned batch can never corrupt the trajectory
+irreversibly (the failure mode that ends multi-day runs — see EXPERIMENTS.md
+§Fault tolerance).
+
+Guard state (a tiny scalar dict, checkpointed as its own group):
+    mean, var — EMA estimates of the recent loss level and spread
+    count     — accepted steps so far (arms the z-score after `warmup`)
+    skips     — total rejected steps (monotone; the launcher tracks
+                CONSECUTIVE skips itself for the escalation policy)
+
+The spike monitor only updates its EMAs on ACCEPTED steps, so a rejected
+loss can never drag the baseline toward the anomaly it just rejected.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_guard_state() -> dict:
+    return {
+        "mean": jnp.zeros((), jnp.float32),
+        "var": jnp.zeros((), jnp.float32),
+        "count": jnp.zeros((), jnp.int32),
+        "skips": jnp.zeros((), jnp.int32),
+    }
+
+
+def guard_verdict(guard: dict, loss, gnorm, *, zmax: float, warmup: int):
+    """ok scalar (bool): finite loss AND finite grad norm AND, once the EMA
+    has `warmup` samples, a loss z-score within `zmax`. NaN comparisons are
+    False, so a NaN loss fails the finiteness check rather than sneaking
+    through the spike test."""
+    loss = jnp.asarray(loss, jnp.float32)
+    finite = jnp.isfinite(loss) & jnp.isfinite(jnp.asarray(gnorm, jnp.float32))
+    armed = guard["count"] >= warmup
+    std = jnp.sqrt(jnp.maximum(guard["var"], 0.0))
+    z = (loss - guard["mean"]) / (std + 1e-8)
+    spike = armed & (z > zmax)
+    return finite & ~spike
+
+
+def guard_update(guard: dict, loss, ok, *, ema: float) -> dict:
+    """Advance the monitor: EMA mean/variance absorb the loss only when the
+    step was accepted (`jnp.where` selects, so a NaN loss on the rejected
+    branch never propagates into the state)."""
+    loss = jnp.asarray(loss, jnp.float32)
+    first = guard["count"] == 0
+    delta = loss - guard["mean"]
+    # EMA mean + EMA variance of the innovation (Welford-style, exponential):
+    # seeded exactly on the first accepted sample so warmup needs no bias fix
+    mean2 = jnp.where(first, loss, guard["mean"] + (1.0 - ema) * delta)
+    var2 = jnp.where(first, 0.0, ema * (guard["var"] + (1.0 - ema) * delta * delta))
+    accept = jnp.asarray(ok)
+    return {
+        "mean": jnp.where(accept, mean2, guard["mean"]),
+        "var": jnp.where(accept, var2, guard["var"]),
+        "count": guard["count"] + accept.astype(jnp.int32),
+        "skips": guard["skips"] + (1 - accept.astype(jnp.int32)),
+    }
+
+
+def guard_step(guard: dict, loss, gnorm, *, zmax: float, warmup: int,
+               ema: float):
+    """(ok, guard') — the one call the train step makes."""
+    ok = guard_verdict(guard, loss, gnorm, zmax=zmax, warmup=warmup)
+    return ok, guard_update(guard, loss, ok, ema=ema)
+
+
+def global_grad_norm(grads) -> jnp.ndarray:
+    """Global L2 norm over every float leaf — the same reduction shape as
+    clip_by_global_norm's, so under the clip the two computations CSE."""
+    leaves = jax.tree_util.tree_leaves(grads)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))

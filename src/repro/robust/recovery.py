@@ -1,0 +1,56 @@
+"""Escalating recovery policy: skip -> rollback -> hard failure.
+
+The anomaly guard (robust/guard.py) makes single poisoned steps free: the
+update is skipped and training continues. But K CONSECUTIVE skips mean the
+state itself is bad — a projector swapped from a poisoned SVD, moments that
+absorbed an Inf before the guard was enabled, a data shard stuck on garbage
+— and skipping forever just burns compute. The launcher then escalates:
+restore the newest VALID checkpoint (checkpoint/manager.py walks past
+corrupt ones), re-arm the async-refresh driver and data position, optionally
+decay the LR and force a synchronous subspace re-sync, and try again. The
+retry budget is bounded: a fault that survives `max_rollbacks` restores is
+structural, and the right behavior is a loud TrainingFailure for the
+cluster scheduler, not an infinite loop.
+
+This object is pure host-side bookkeeping — it never touches device state;
+launch/train.py owns the actual restore mechanics.
+"""
+from __future__ import annotations
+
+import time
+
+
+class TrainingFailure(RuntimeError):
+    """Raised when the rollback budget is exhausted — the run is not
+    recoverable by retrying and needs human / scheduler attention."""
+
+
+class RecoveryController:
+    def __init__(self, max_skips: int = 3, max_rollbacks: int = 2,
+                 backoff: float = 0.0):
+        self.max_skips = max(1, int(max_skips))
+        self.max_rollbacks = int(max_rollbacks)
+        self.backoff = float(backoff)
+        self.consecutive = 0
+        self.rollbacks = 0
+
+    def observe_step(self, ok: bool) -> bool:
+        """Record one guarded step's verdict; True means 'roll back now'."""
+        if ok:
+            self.consecutive = 0
+            return False
+        self.consecutive += 1
+        return self.consecutive >= self.max_skips
+
+    def start_rollback(self) -> int:
+        """Consume one retry (sleeping the linear backoff) and return the
+        rollback ordinal, or raise TrainingFailure when over budget."""
+        self.rollbacks += 1
+        if self.rollbacks > self.max_rollbacks:
+            raise TrainingFailure(
+                f"training failed: {self.consecutive} consecutive anomalous "
+                f"steps persisted through {self.max_rollbacks} rollbacks")
+        self.consecutive = 0
+        if self.backoff > 0:
+            time.sleep(self.backoff * self.rollbacks)
+        return self.rollbacks

@@ -165,3 +165,96 @@ def test_train_resume_bitwise_consistent(tmp_path):
     for x, y in zip(a, b):
         np.testing.assert_allclose(np.asarray(x, np.float32), np.asarray(y, np.float32),
                                    rtol=2e-4, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Integrity validation + corruption fallback (PR 6, checkpoint/manager.py)
+# ---------------------------------------------------------------------------
+
+
+def _save_steps(root, steps, checksum=False, keep=10):
+    ckpt = CheckpointManager(str(root), keep=keep, async_save=False,
+                             checksum=checksum)
+    for s in steps:
+        ckpt.save(s, {"x": jnp.full((8,), float(s))}, block=True)
+    return ckpt
+
+
+def test_all_steps_survives_leftover_pid_tmp_dir(tmp_path):
+    """The real save tmp naming is step_XXXXXXXX.tmp_<pid>; a leftover one
+    (kill mid-save) must neither crash all_steps (the old filter only caught
+    a bare '.tmp' suffix, then int('00000009.tmp') blew up) nor be eligible
+    for restore — and a fresh manager GCs it."""
+    ckpt = _save_steps(tmp_path, [1])
+    tmp = tmp_path / "step_00000009.tmp_12345"
+    os.makedirs(tmp)
+    with open(tmp / "META.json", "w") as f:
+        f.write("{}")  # even a commit marker inside a tmp dir is not trusted
+    assert ckpt.all_steps() == [1]
+    assert ckpt.latest_step() == 1
+    # init-time GC: a new manager (fresh launcher) removes the litter
+    CheckpointManager(str(tmp_path), async_save=False)
+    assert not tmp.exists()
+
+
+def test_latest_valid_step_walks_past_truncated_npz(tmp_path):
+    ckpt = _save_steps(tmp_path, [1, 2, 3])
+    npz = tmp_path / "step_00000003" / "host_0.npz"
+    size = os.path.getsize(npz)
+    with open(npz, "r+b") as f:
+        f.truncate(size // 2)  # torn write
+    assert ckpt.latest_step() == 3  # commit marker says it exists...
+    assert not ckpt.valid_step(3)   # ...but integrity says unusable
+    assert ckpt.valid_step(2)
+    assert ckpt.latest_valid_step() == 2
+    restored = ckpt.restore(2, {"x": jnp.zeros((8,))})
+    np.testing.assert_array_equal(np.asarray(restored["x"]), np.full(8, 2.0))
+
+
+def test_latest_valid_step_skips_unparseable_meta(tmp_path):
+    ckpt = _save_steps(tmp_path, [1, 2])
+    with open(tmp_path / "step_00000002" / "META.json", "w") as f:
+        f.write("{ not json")
+    assert not ckpt.valid_step(2)
+    assert ckpt.latest_valid_step() == 1
+
+
+def test_checksum_catches_bit_flip_zip_crc_cannot_see(tmp_path):
+    """A byte flipped in the npz *central directory* leaves member CRCs
+    intact; only the recorded whole-file crc32 (checksum=True) catches it."""
+    ckpt = _save_steps(tmp_path, [1, 2], checksum=True)
+    assert "checksums" in ckpt.meta(2)
+    npz = tmp_path / "step_00000002" / "host_0.npz"
+    with open(npz, "r+b") as f:
+        f.seek(-3, os.SEEK_END)
+        b = f.read(1)
+        f.seek(-3, os.SEEK_END)
+        f.write(bytes([b[0] ^ 0xFF]))
+    assert not ckpt.valid_step(2)
+    assert ckpt.latest_valid_step() == 1
+
+
+def test_checksum_off_keeps_meta_layout(tmp_path):
+    ckpt = _save_steps(tmp_path, [1], checksum=False)
+    assert "checksums" not in ckpt.meta(1)
+    assert ckpt.valid_step(1)  # zip-CRC fallback still validates
+
+
+def test_async_save_failure_surfaces_on_wait(tmp_path, monkeypatch):
+    """A daemon-thread write failure must not vanish: the next wait() (or
+    the next save(), which waits first) re-raises it."""
+    import repro.checkpoint.manager as manager_module
+
+    ckpt = CheckpointManager(str(tmp_path), async_save=True)
+
+    def boom(*a, **k):
+        raise OSError("disk full")
+
+    monkeypatch.setattr(manager_module.np, "savez", boom)
+    ckpt.save(1, {"x": jnp.ones(2)})
+    with pytest.raises(RuntimeError, match="async checkpoint save failed"):
+        ckpt.wait()
+    # the failure is consumed: the manager keeps working afterwards
+    monkeypatch.undo()
+    ckpt.save(2, {"x": jnp.ones(2)}, block=True)
+    assert ckpt.latest_step() == 2
