@@ -15,6 +15,15 @@ benchmarks grow rows across PRs. With --max-ratio, exits non-zero if any
 matched *_us timing field regressed by more than R× (timings only: analytic
 cost fields are deterministic and compared exactly at ratio 1.0 elsewhere).
 Wall-clock noise on shared CI runners is real, so the default is report-only.
+
+--exact-analytic is the deterministic gate: every matched ANALYTIC field —
+byte totals ("bytes" in the name, including the pinned p_bytes_per_elem_*
+rows and checkpoint file sizes), the analytic traffic ratios
+(opt_path_ratio*, total_ratio) and kernel launch counts — must equal the
+baseline exactly. These are pure functions of shapes and codec layouts, so
+ANY drift means the cost model or the on-disk format changed and the
+committed baseline must be regenerated deliberately. Timing-derived fields
+(*_us, speedup, spike_ratio, ...) are never part of this gate.
 """
 from __future__ import annotations
 
@@ -56,6 +65,22 @@ def diff_records(baseline: list[dict], current: list[dict]) -> dict:
     }
 
 
+def _is_analytic(field: str) -> bool:
+    """Deterministic cost-model / file-layout fields (see module docstring)."""
+    return ("bytes" in field or field.startswith("opt_path_ratio")
+            or field in ("total_ratio", "kernel_launches_unfused",
+                         "kernel_launches_fused"))
+
+
+def analytic_drift(diff: dict) -> list[tuple[dict, str, dict]]:
+    out = []
+    for m in diff["matched"]:
+        for f, v in m["fields"].items():
+            if _is_analytic(f) and v["baseline"] != v["current"]:
+                out.append((m["key"], f, v))
+    return out
+
+
 def worst_timing_ratio(diff: dict) -> tuple[float, str]:
     worst, where = 0.0, ""
     for m in diff["matched"]:
@@ -73,6 +98,10 @@ def main():
     ap.add_argument("--max-ratio", type=float, default=0.0,
                     help="fail if any matched *_us field regressed by more "
                          "than this factor (0 = report only)")
+    ap.add_argument("--exact-analytic", action="store_true",
+                    help="fail if any matched analytic field (byte totals, "
+                         "analytic traffic ratios, launch counts) differs "
+                         "from the baseline at all")
     args = ap.parse_args()
     with open(args.baseline) as f:
         baseline = json.load(f)
@@ -94,6 +123,16 @@ def main():
         raise SystemExit(
             f"benchmark regression: {where} = {worst:.2f}x baseline "
             f"(limit {args.max_ratio}x)")
+    if args.exact_analytic:
+        drift = analytic_drift(diff)
+        for key, f, v in drift:
+            print(f"# analytic drift: {key} {f}: "
+                  f"{v['baseline']} -> {v['current']}")
+        if drift:
+            raise SystemExit(
+                f"{len(drift)} analytic field(s) drifted from the committed "
+                f"baseline — if the cost model or file layout changed on "
+                f"purpose, regenerate the baseline JSON in the same commit")
 
 
 if __name__ == "__main__":

@@ -49,6 +49,9 @@ def leaf_traffic(m: int, r: int, n: int, g_itemsize: int = 2) -> dict:
       fused8:  P read ×1, uint8 codes read + write (2·2·rn bytes) plus the
                per-block absmax scales (2·2·4·rn/QBLOCK) — the int8 epilogue
                moves ~4× fewer moment bytes than the f32 fused kernel
+      fused4:  packed-int4 P read (0.5·mr nibble codes + 4·mr/QBLOCK absmax
+               scales, unpacked in VMEM) + the fused8 moment streams — the
+               projector's optimizer-path read drops 4.0 → 0.5 bytes/elem
     """
     from repro.quant.codec import QBLOCK
 
@@ -56,15 +59,24 @@ def leaf_traffic(m: int, r: int, n: int, g_itemsize: int = 2) -> dict:
     unfused_opt = 2 * F32 * m * r + 8 * F32 * r * n
     fused_opt = F32 * m * r + 4 * F32 * r * n
     fused8_opt = F32 * m * r + 4 * r * n * (1 + F32 / QBLOCK)
+    moments8 = 4 * r * n * (1 + F32 / QBLOCK)
+    fused4_opt = (0.5 + F32 / QBLOCK) * m * r + moments8
     return {
         "unfused_bytes": mandatory + unfused_opt,
         "fused_bytes": mandatory + fused_opt,
         "fused8_bytes": mandatory + fused8_opt,
+        "fused4_bytes": mandatory + fused4_opt,
         "unfused_opt_path_bytes": unfused_opt,
         "fused_opt_path_bytes": fused_opt,
         "fused8_opt_path_bytes": fused8_opt,
+        "fused4_opt_path_bytes": fused4_opt,
         "opt_path_ratio": unfused_opt / fused_opt,
         "opt_path_ratio_q8": unfused_opt / fused8_opt,
+        "opt_path_ratio_q4": unfused_opt / fused4_opt,
+        # pinned per-element P read cost on the optimizer path (bench_diff
+        # gates these exactly: the int4 row is THE tentpole claim)
+        "p_bytes_per_elem_fused8": 4.0,
+        "p_bytes_per_elem_fused4": 0.5,
         "total_ratio": (mandatory + unfused_opt) / (mandatory + fused_opt),
         "kernel_launches_unfused": 3,
         "kernel_launches_fused": 1,
@@ -106,6 +118,7 @@ def bench_leaf(name, L, m, r, n, iters=5):
     P, G, M, V, count = _inputs(L, m, r, n, jax.random.PRNGKey(0))
     mq, ms = codec.quantize_axis(M, axis=-1, signed=True)
     vq, vs = codec.quantize_axis(V, axis=-1, signed=False)
+    Pq = codec.quant4_axis_state(P)  # packed projector, consumed in-kernel
 
     @jax.jit
     def unfused(P, G, M, V, count):
@@ -122,9 +135,15 @@ def bench_leaf(name, L, m, r, n, iters=5):
         return ops.galore_fused_adam8_step(P, G, mq, ms, vq, vs, count,
                                            alpha=0.25)
 
+    @jax.jit
+    def fused_q4(Pq, G, mq, ms, vq, vs, count):
+        return ops.galore_fused_adam8_step(Pq, G, mq, ms, vq, vs, count,
+                                           alpha=0.25)
+
     t_unfused, _ = time_fn(unfused, P, G, M, V, count, iters=iters)
     t_fused, _ = time_fn(fused, P, G, M, V, count, iters=iters)
     t_fused8, _ = time_fn(fused_q8, P, G, mq, ms, vq, vs, count, iters=iters)
+    t_fused4, _ = time_fn(fused_q4, Pq, G, mq, ms, vq, vs, count, iters=iters)
     traffic = leaf_traffic(m, r, n, g_itemsize=G.dtype.itemsize)
     for k in list(traffic):
         if k.endswith("_bytes"):  # timings cover the whole L-stack; match
@@ -136,6 +155,7 @@ def bench_leaf(name, L, m, r, n, iters=5):
         "unfused_us": t_unfused * 1e6,
         "fused_us": t_fused * 1e6,
         "fused8_us": t_fused8 * 1e6,
+        "fused4_us": t_fused4 * 1e6,
         "speedup": t_unfused / t_fused,
         **traffic,
     }
@@ -145,6 +165,8 @@ def bench_leaf(name, L, m, r, n, iters=5):
          f"bytes={traffic['fused_bytes']};opt_path_ratio={traffic['opt_path_ratio']:.2f}")
     emit(f"kernel_fused8_{name}", rec["fused8_us"],
          f"bytes={traffic['fused8_bytes']};opt_path_ratio_q8={traffic['opt_path_ratio_q8']:.2f}")
+    emit(f"kernel_fused4_{name}", rec["fused4_us"],
+         f"bytes={traffic['fused4_bytes']};opt_path_ratio_q4={traffic['opt_path_ratio_q4']:.2f}")
     return rec
 
 

@@ -7,16 +7,27 @@ Two models side by side:
     memory, 7B training < 24 GB;
   * the REAL quantized-state accounting (core/galore.galore_state_bytes with
     each leaf's resolved QuantPolicy: int8 codes + per-block absmax, packed
-    int4 projectors + flat-block absmax) for fp32 Adam / GaLore / GaLore-8bit
-    / GaLore-8bit+int4-proj, cross-checked against the paper's 82.5 % and
-    63.3 % claims. `--quick` asserts the quantized configs report strictly
-    fewer optimizer bytes than fp32 (the CI gate).
+    int4 projectors + per-(block, column) absmax) for fp32 Adam / GaLore /
+    GaLore-8bit / GaLore-8bit+int4-proj, cross-checked against the paper's
+    82.5 % and 63.3 % claims. `--quick` asserts the quantized configs report
+    strictly fewer optimizer bytes than fp32 (the CI gate).
+
+Plus the DISK side of the story: checkpoint_bytes_rows saves the llama_60m
+smoke params through CheckpointManager with each file codec (f32 / int8 /
+int4) and records the real on-disk bytes and save wall time — the int4
+codec must be ≥4× smaller than f32 (asserted). The byte totals are
+deterministic (uncompressed npz of fixed shapes), so CI gates them exactly
+via bench_diff --exact-analytic against results/BENCH_ckpt.json.
 
   PYTHONPATH=src python -m benchmarks.memory_breakdown [--quick]
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import tempfile
+import time
 
 import jax
 
@@ -84,6 +95,52 @@ def quantized_breakdown(sizes, quick: bool = False):
     return out
 
 
+def checkpoint_bytes_rows(quick: bool = False,
+                          out: str = "results/BENCH_ckpt.json") -> list:
+    """Real checkpoint files, f32 vs quantized codecs: bytes on disk + save
+    wall time for the llama_60m smoke params (see module docstring)."""
+    from repro.checkpoint.manager import CheckpointManager
+
+    cfg = get_config("llama_60m", smoke=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    tree = {"params": params}
+    print("\n# checkpoint file codec (llama_60m smoke params)")
+    print(f"{'codec':8s} {'bytes':>12s} {'vs f32':>8s} {'save ms':>9s}")
+    records, sizes = [], {}
+    with tempfile.TemporaryDirectory() as d:
+        for codec in (None, "int8", "int4"):
+            label = codec or "f32"
+            mgr = CheckpointManager(os.path.join(d, label), async_save=False,
+                                    quantize=codec)
+            t0 = time.perf_counter()
+            mgr.save(1, tree)
+            dt = time.perf_counter() - t0
+            # npz payload only: deterministic bytes (uncompressed archive of
+            # fixed shapes from PRNGKey(0)) — META.json's length varies with
+            # its wall-clock timestamp and would defeat the exact CI gate
+            root = os.path.join(d, label)
+            nbytes = sum(os.path.getsize(os.path.join(r, f))
+                         for r, _, fs in os.walk(root) for f in fs
+                         if f.endswith(".npz"))
+            sizes[label] = nbytes
+            ratio = sizes["f32"] / nbytes
+            print(f"{label:8s} {nbytes:12d} {ratio:7.2f}x {dt * 1e3:8.1f}")
+            records.append({
+                "bench": "ckpt_bytes", "arch": "llama_60m", "smoke": True,
+                "codec": label, "ckpt_bytes": nbytes,
+                "ckpt_bytes_ratio_vs_f32": ratio, "save_us": dt * 1e6,
+            })
+            emit(f"ckpt_bytes_{label}", nbytes, f"ratio_vs_f32={ratio:.2f}")
+    # the tentpole disk claim: int4 checkpoints are ≥4× smaller than f32
+    assert sizes["f32"] / sizes["int4"] >= 4.0, sizes
+    assert sizes["int8"] < sizes["f32"]
+    os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(records, f, indent=2)
+    print(f"# wrote {out} ({len(records)} codecs)")
+    return records
+
+
 def main(quick: bool = False):
     sizes = (["llama_60m", "llama_7b"] if quick
              else ["llama_60m", "llama_130m", "llama_350m", "llama_1b", "llama_7b"])
@@ -129,6 +186,7 @@ def main(quick: bool = False):
                  f"{g['opt']/max(l['opt'],1):.2f}x")
 
     quantized_breakdown(sizes, quick=quick)
+    checkpoint_bytes_rows(quick=quick)
 
 
 if __name__ == "__main__":

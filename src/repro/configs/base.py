@@ -200,6 +200,12 @@ class TrainConfig:
     galore_calibrate_costs: bool = False  # measure per-shape SVD wall time
     # once at launcher startup and stamp GaLoreConfig.unit_costs so
     # partition_refresh bins on measured costs instead of the asymptotic model
+    galore_recalibrate_every: int = 0  # async driver: every N refresh
+    # dispatches, re-run the SVD cost calibration and rebuild the refresh
+    # programs with the fresh unit_costs — host contention drifts the real
+    # per-shape costs over a long run, and a stale bin-packing resurrects the
+    # straggler bins calibration exists to kill. 0 disables (the startup
+    # calibration, if any, holds for the whole run).
     galore_fused_adam: bool = False  # single-kernel project→Adam→back per leaf
     # (requires optimizer adam/adamw; see kernels/galore_fused.py)
     galore_fused_apply: bool = False  # fold W ← W + G̃ into the fused-kernel

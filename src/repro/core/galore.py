@@ -193,8 +193,10 @@ def galore(
             )
 
         # persistent P may be stored bf16 / packed int4 — dequantize once per
-        # step; the f32 copy is transient (consumed by the projection matmuls)
-        proj32 = _read_proj_tree(plan_src, proj, plans)
+        # step; the f32 copy is transient (consumed by the projection matmuls).
+        # Fused dispatch keeps axis-blocked int4 states PACKED: the kernel
+        # unpacks nibbles in VMEM, so no f32 projector tree ever hits HBM.
+        proj_eff = _read_proj_tree(plan_src, proj, plans, keep_packed=fused_adam)
 
         if quantized or fused_adam:
             # --- 2-4 managed) galore owns the Adam math, bypassing the inner
@@ -203,7 +205,7 @@ def galore(
             # TPU, the ref oracle elsewhere) and int8 leaves additionally get
             # the dequant→Adam→requant epilogue in either mode ---
             updates, inner_state = _managed_adam_update(
-                grads, proj32, state["inner"], plans, cfg, b1, b2, eps,
+                grads, proj_eff, state["inner"], plans, cfg, b1, b2, eps,
                 fused=fused_adam,
             )
         else:
@@ -213,7 +215,7 @@ def galore(
                     return g
                 return _project(g, P, plan)
 
-            lor_grads = jax.tree_util.tree_map(proj_leaf, grads, proj32, plans)
+            lor_grads = jax.tree_util.tree_map(proj_leaf, grads, proj_eff, plans)
 
             # --- 3) inner optimizer in the compact space ---
             lor_updates, inner_state = inner.update(lor_grads, state["inner"], params)
@@ -225,7 +227,7 @@ def galore(
                 full = _project_back(u.astype(jnp.float32), P, plan)
                 return cfg.scale * full  # apply_updates casts to the param dtype
 
-            updates = jax.tree_util.tree_map(back_leaf, lor_updates, proj32, plans)
+            updates = jax.tree_util.tree_map(back_leaf, lor_updates, proj_eff, plans)
         new_state = {
             "step": step + 1,
             "key": state["key"],
@@ -239,16 +241,26 @@ def galore(
     return GradientTransformation(init, update)
 
 
-def _read_proj_tree(ref_tree, proj, plans):
+def _read_proj_tree(ref_tree, proj, plans, keep_packed: bool = False):
     """Dequant-on-read over the whole projector tree (no-op for fp32 storage).
 
     `ref_tree` supplies the full WEIGHT shapes (params or full-shape grads)
-    from which each leaf's projector shape is derived."""
-    return jax.tree_util.tree_map(
-        lambda p, P, plan: (read_projector(P, proj_shape(p, plan))
-                            if plan.galore else P),
-        ref_tree, proj, plans,
-    )
+    from which each leaf's projector shape is derived.
+
+    keep_packed=True (the fused dispatch): axis-blocked int4 qstates pass
+    through UNTOUCHED — kernels/ops.py routes the packed codes + scales into
+    the epilogue, which dequantizes nibble blocks in VMEM. The transient f32
+    projector tree (4 B/elem of HBM read per step) disappears entirely;
+    legacy flat-int4 and bf16 storage still dequantize here."""
+
+    def read(p, P, plan):
+        if not plan.galore:
+            return P
+        if keep_packed and codec.is_axis4_qstate(P):
+            return P
+        return read_projector(P, proj_shape(p, plan))
+
+    return jax.tree_util.tree_map(read, ref_tree, proj, plans)
 
 
 # blocked axis of an int8 moment leaf — shared with the async buffer swap's
@@ -276,7 +288,7 @@ def _managed_adam_init(params, plans):
     }
 
 
-def _managed_adam_update(grads, proj32, inner_state, plans, cfg: GaLoreConfig,
+def _managed_adam_update(grads, proj_eff, inner_state, plans, cfg: GaLoreConfig,
                          b1: float, b2: float, eps: float, *, fused: bool,
                          params=None, eta: float | jnp.ndarray = 0.0,
                          wd: float = 0.0):
@@ -300,6 +312,7 @@ def _managed_adam_update(grads, proj32, inner_state, plans, cfg: GaLoreConfig,
 
     apply_w = params is not None
     count = inner_state["count"] + 1
+    stochastic = cfg.quant.stochastic_round
 
     def dequant_mv(m_st, v_st, plan):
         ax = _moment_quant_axis(plan)
@@ -308,8 +321,12 @@ def _managed_adam_update(grads, proj32, inner_state, plans, cfg: GaLoreConfig,
 
     def requant_mv(m_t, v_t, plan):
         ax = _moment_quant_axis(plan)
-        return (codec.quant_axis_state(m_t, axis=ax, signed=True),
-                codec.quant_axis_state(v_t, axis=ax, signed=False))
+        return (codec.quant_axis_state(m_t, axis=ax, signed=True,
+                                       stochastic=stochastic, count=count,
+                                       salt=codec.SR_SALT_M),
+                codec.quant_axis_state(v_t, axis=ax, signed=False,
+                                       stochastic=stochastic, count=count,
+                                       salt=codec.SR_SALT_V))
 
     def finish(out, p):
         """Fold eta/wd into the weight when applying, else emit the update."""
@@ -339,13 +356,14 @@ def _managed_adam_update(grads, proj32, inner_state, plans, cfg: GaLoreConfig,
                       else ops.galore_fused_adam8_apply_step_right)
                 out = fn(P, g, p, m_st["q"], m_st["scale"], v_st["q"],
                          v_st["scale"], count, b1=b1, b2=b2, eps=eps,
-                         alpha=cfg.scale, eta=eta, wd=wd)
+                         alpha=cfg.scale, eta=eta, wd=wd,
+                         stochastic=stochastic)
             else:
                 fn = (ops.galore_fused_adam8_step if left
                       else ops.galore_fused_adam8_step_right)
                 out = fn(P, g, m_st["q"], m_st["scale"], v_st["q"],
                          v_st["scale"], count, b1=b1, b2=b2, eps=eps,
-                         alpha=cfg.scale)
+                         alpha=cfg.scale, stochastic=stochastic)
             upd, mq, ms, vq, vs = out
             m_t, v_t = {"q": mq, "scale": ms}, {"q": vq, "scale": vs}
         elif fused:
@@ -384,7 +402,7 @@ def _managed_adam_update(grads, proj32, inner_state, plans, cfg: GaLoreConfig,
         leaf(g, P, m, v, plan, p)
         for g, P, m, v, plan, p in zip(
             flat_g,
-            treedef.flatten_up_to(proj32),
+            treedef.flatten_up_to(proj_eff),
             treedef.flatten_up_to(inner_state["m"]),
             treedef.flatten_up_to(inner_state["v"]),
             treedef.flatten_up_to(plans),
@@ -425,9 +443,9 @@ def make_fused_apply(cfg: GaLoreConfig, *, b1: float, b2: float, eps: float,
             proj, sched = mgr.refresh_tree(
                 grads, galore_state["proj"], sched, plans, key, step=step,
                 valid=valid)
-        proj32 = _read_proj_tree(grads, proj, plans)
+        proj_eff = _read_proj_tree(grads, proj, plans, keep_packed=True)
         new_params, inner_state = _managed_adam_update(
-            grads, proj32, galore_state["inner"], plans, cfg, b1, b2, eps,
+            grads, proj_eff, galore_state["inner"], plans, cfg, b1, b2, eps,
             fused=True, params=params, eta=eta, wd=weight_decay,
         )
         new_state = {
@@ -555,7 +573,7 @@ def swap_pending_state(params, galore_state, pending, cfg: GaLoreConfig,
 
 # bytes per element of persistent storage, scale overhead included
 _PROJ_BYTES = {"fp32": 4.0, "bf16": 2.0,
-               "int4": 0.5 + 4.0 / codec.BLOCK}   # packed nibbles + absmax/256
+               "int4": 0.5 + 4.0 / codec.QBLOCK}  # packed nibbles + absmax/128
 _MOMENT_BYTES = {"fp32": 4.0,
                  "int8": 1.0 + 4.0 / codec.QBLOCK}  # codes + absmax/128
 

@@ -204,22 +204,34 @@ def compute_projector(
 
 
 def store_projector(P: jnp.ndarray, mode: str = "fp32"):
-    """f32 projector -> its persistent storage form (array or int4 qstate)."""
-    from repro.quant.codec import quant4_state
+    """f32 projector -> its persistent storage form (array or int4 qstate).
+
+    int4 uses the KERNEL-CONSUMABLE axis-blocked layout (codec.quantize4_axis:
+    split-half packed nibbles + per-(QBLOCK-block, column) absmax) so the
+    fused epilogue can take the stored state directly and unpack in VMEM —
+    the dequantized f32 tree no longer exists on the hot path."""
+    from repro.quant.codec import quant4_axis_state
 
     if mode == "fp32":
         return P.astype(jnp.float32)
     if mode == "bf16":
         return P.astype(jnp.bfloat16)
     if mode == "int4":
-        return quant4_state(P)
+        return quant4_axis_state(P)
     raise ValueError(f"unknown projector storage mode {mode!r}")
 
 
 def read_projector(stored, shape=None) -> jnp.ndarray:
-    """Dequant-on-read: storage form -> f32 P (shape required for int4)."""
-    from repro.quant.codec import dequant4_state, is_qstate
+    """Dequant-on-read: storage form -> f32 P (shape required for int4).
 
+    Understands both INT4 layouts — the axis-blocked kernel layout (codes and
+    scales have equal rank) written by `store_projector`, and the legacy flat
+    layout (2-D codes + 1-D scales) still found in old checkpoints."""
+    from repro.quant.codec import dequant4_axis_state, dequant4_state, is_axis4_qstate, is_qstate
+
+    if is_axis4_qstate(stored):
+        assert shape is not None, "int4 projector read needs the logical shape"
+        return dequant4_axis_state(stored, shape)
     if is_qstate(stored):
         assert shape is not None, "int4 projector read needs the logical shape"
         return dequant4_state(stored, shape)

@@ -16,8 +16,9 @@ Quantized state (GaLoreConfig.quant): int8 moment leaves become
 shard exactly like the fp32 moments they replace; the per-block scales
 (1/128 of the codes' bytes) stay replicated, since sharding a blocked dim
 whose extent is ceil(n/128) rarely divides the mesh and the cost of
-replication is negligible. Packed int4 projectors shard their flat block
-dim on the FSDP axis like the adam8bit payloads. All axes derive from the
+replication is negligible. Packed int4 projectors (axis-blocked kernel
+layout) shard their packed kept-row dim on the FSDP axis; their per-block
+scales stay replicated. All axes derive from the
 same per-leaf SubspacePlans the optimizer uses (via
 factory.effective_galore_config), so the axes tree always zips with the
 real state tree.
@@ -96,8 +97,13 @@ def _galore_proj_axes(p_axes, p_struct, gcfg: GaLoreConfig):
         if not plan.galore:
             return SCALAR  # scalar placeholder
         if plan.proj_store == "int4":
-            # packed flat blocks: shard the block dim like adam8bit payloads
-            return QBLOCK_AXES
+            # axis-blocked packed layout (codec.quantize4_axis): codes
+            # (..., kept_pad/2, r) shard the packed kept dim on the FSDP
+            # axis ("qblocks" -> data); the per-(block, column) scales
+            # (..., nb, r) are 1/(2·QBLOCK) of the codes' bytes and stay
+            # replicated (their blocked dim rarely divides the mesh)
+            return {"q": tuple(ax[:-2]) + ("qblocks", None),
+                    "scale": tuple(ax[:-2]) + (None, None)}
         kept = ax[-2] if plan.side == "left" else ax[-1]
         # P's rank dim stays replicated (see core/projector.py sharding note)
         return tuple(ax[:-2]) + (kept, None)

@@ -1,11 +1,16 @@
-"""Fused 8-bit Adam update kernel: dequant → Adam → requant in one VMEM pass.
+"""Fused 8-bit Adam update: thin shim over the parametric epilogue builder.
 
-The unfused sequence reads/writes the fp32 moments from HBM three times
-(dequant, update, requant). This kernel streams (tile_blocks × 256)-element
-tiles: uint8 codes + per-block absmax in, Adam math in f32 registers,
-fresh codes/absmax + the normalized update out — the fp32 moments never
-touch HBM. For a memory-bound op this is the ~3× HBM-traffic win the paper's
-8-bit GaLore configuration banks on (see benchmarks/roofline notes).
+Historically this module carried its own Pallas kernel (dequant → Adam →
+requant over flat (tile_blocks × 256)-element tiles). That body was the
+same math as the quantized GaLore epilogue in galore_fused.py with the
+projection sandwich deleted, so it is now expressed as exactly that:
+`galore_fused.adam8bit_blocks_update` runs the epilogue with
+``project=False`` (R = G), one quantization block per tile row
+(qblock = BLOCK = the swept extent) and the flat block axis folded into the
+batch grid. One kernel body serves every quantized variant; this shim keeps
+the historical signature (including the codebook args — the epilogue owns
+its codebooks, which are the same `dynamic_codebook` tables every caller
+ever passed) and the historical shapes, bitwise.
 
 Quantization inside the kernel uses a branch-free nearest-codebook search:
 idx = Σ (x ≥ midpoint_i) over the 255 midpoints — a (tile, 256, 255) compare
@@ -13,55 +18,12 @@ that maps onto the VPU; no sort/searchsorted primitive needed on TPU.
 """
 from __future__ import annotations
 
-import functools
-
-import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
-
+from repro.kernels.galore_fused import adam8bit_blocks_update
 from repro.optim.quant8 import BLOCK
 
 TILE_BLOCKS = 16  # rows of 256 elements per grid step
 
-
-def _dequant(codes, scale, book):
-    return book[codes.astype(jnp.int32)] * scale[:, None]
-
-
-def _quant(x, scale_out, book_mids):
-    """x (tb, BLOCK) -> codes u8; writes absmax into scale_out."""
-    absmax = jnp.max(jnp.abs(x), axis=1) + 1e-12
-    normed = x / absmax[:, None]
-    # branch-free searchsorted: count midpoints <= value
-    idx = jnp.sum(
-        normed[:, :, None] >= book_mids[None, None, :], axis=-1, dtype=jnp.int32
-    )
-    return idx.astype(jnp.uint8), absmax
-
-
-def _kernel(
-    g_ref, mq_ref, ms_ref, vq_ref, vs_ref, count_ref,
-    book_s_ref, book_u_ref, mids_s_ref, mids_u_ref,
-    upd_ref, mq_out, ms_out, vq_out, vs_out,
-    *, b1: float, b2: float, eps: float,
-):
-    book_s = book_s_ref[...]
-    book_u = book_u_ref[...]
-    m = _dequant(mq_ref[...], ms_ref[...], book_s)
-    v = _dequant(vq_ref[...], vs_ref[...], book_u)
-    g = g_ref[...].astype(jnp.float32)
-    m = b1 * m + (1 - b1) * g
-    v = b2 * v + (1 - b2) * g * g
-    count = count_ref[0].astype(jnp.float32)
-    c1 = 1.0 - b1 ** count
-    c2 = 1.0 - b2 ** count
-    upd_ref[...] = (m / c1) / (jnp.sqrt(v / c2) + eps)
-    mq, ms = _quant(m, None, mids_s_ref[...])
-    vq, vs = _quant(v, None, mids_u_ref[...])
-    mq_out[...] = mq
-    ms_out[...] = ms
-    vq_out[...] = vq
-    vs_out[...] = vs
+__all__ = ["BLOCK", "TILE_BLOCKS", "adam8bit_update"]
 
 
 def adam8bit_update(
@@ -70,48 +32,13 @@ def adam8bit_update(
     *, b1=0.9, b2=0.999, eps=1e-8, interpret: bool = False,
 ):
     """Inputs: g (nb, BLOCK) f32; codes (nb, BLOCK) u8; scales (nb,) f32;
-    count scalar int32; codebooks (256,) f32. Returns
+    count scalar int32; codebooks (256,) f32 (accepted for signature
+    compatibility — the fused epilogue uses the canonical dynamic
+    codebooks, which are what every caller passes). Returns
     (update, m_codes', m_scale', v_codes', v_scale')."""
-    nb = g_blocks.shape[0]
-    tb = min(TILE_BLOCKS, nb)
-    grid = (pl.cdiv(nb, tb),)
-    mids_s = (book_signed[:-1] + book_signed[1:]) / 2.0
-    mids_u = (book_unsigned[:-1] + book_unsigned[1:]) / 2.0
-    row = lambda i: (i, 0)
-    vec = lambda i: (i,)
-    rep = lambda i: (0,)
-    out_shapes = (
-        jax.ShapeDtypeStruct((nb, BLOCK), jnp.float32),
-        jax.ShapeDtypeStruct((nb, BLOCK), jnp.uint8),
-        jax.ShapeDtypeStruct((nb,), jnp.float32),
-        jax.ShapeDtypeStruct((nb, BLOCK), jnp.uint8),
-        jax.ShapeDtypeStruct((nb,), jnp.float32),
-    )
-    return pl.pallas_call(
-        functools.partial(_kernel, b1=b1, b2=b2, eps=eps),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((tb, BLOCK), row),  # g
-            pl.BlockSpec((tb, BLOCK), row),  # m codes
-            pl.BlockSpec((tb,), vec),  # m scale
-            pl.BlockSpec((tb, BLOCK), row),  # v codes
-            pl.BlockSpec((tb,), vec),  # v scale
-            pl.BlockSpec((1,), rep),  # count
-            pl.BlockSpec((256,), rep),  # signed book
-            pl.BlockSpec((256,), rep),  # unsigned book
-            pl.BlockSpec((255,), rep),  # signed mids
-            pl.BlockSpec((255,), rep),  # unsigned mids
-        ],
-        out_specs=(
-            pl.BlockSpec((tb, BLOCK), row),
-            pl.BlockSpec((tb, BLOCK), row),
-            pl.BlockSpec((tb,), vec),
-            pl.BlockSpec((tb, BLOCK), row),
-            pl.BlockSpec((tb,), vec),
-        ),
-        out_shape=out_shapes,
+    del book_signed, book_unsigned
+    return adam8bit_blocks_update(
+        g_blocks, m_codes, m_scale, v_codes, v_scale, count,
+        b1=b1, b2=b2, eps=eps, block=BLOCK, tile_blocks=TILE_BLOCKS,
         interpret=interpret,
-    )(
-        g_blocks, m_codes, m_scale, v_codes, v_scale,
-        count.reshape(1), book_signed, book_unsigned, mids_s, mids_u,
     )

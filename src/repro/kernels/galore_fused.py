@@ -90,7 +90,15 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels.galore_project import _batch
-from repro.quant.codec import QBLOCK, dynamic_codebook
+from repro.quant.codec import (
+    QBLOCK,
+    SR_SALT_M,
+    SR_SALT_V,
+    dynamic_codebook,
+    int4_codebook,
+    is_qstate,
+    sr_uniform,
+)
 
 DEFAULT_BN = 512
 VMEM_BUDGET = 12 * 1024 * 1024  # leave headroom out of ~16 MB/core
@@ -170,7 +178,14 @@ def galore_fused_adam_step(
     axis, so an (L, E, m, n) leaf is a single `pallas_call`. Returns
     (G̃ (..., m, n) f32, M' , V'); M/V are updated in place via
     input_output_aliases — treat the inputs as donated.
-    """
+
+    A packed-INT4 qstate P routes through the parametric epilogue (same
+    math, in-VMEM projector dequant)."""
+    if is_qstate(P):
+        return _fused_epilogue_call(
+            "left", False, False, P, G, None, (M, V), count,
+            b1=b1, b2=b2, eps=eps, alpha=alpha, eta=0.0, wd=0.0, tile0=bn,
+            quant_p=True, interpret=interpret)
     m, n = G.shape[-2:]
     r = P.shape[-1]
     assert P.shape[-2] == m, (P.shape, G.shape)
@@ -264,8 +279,13 @@ def galore_fused_adam_step_right(
     leaves (m > n) stop round-tripping g/m/v through swapaxes copies in HBM.
     VMEM budget is the left kernel's with the roles of m and n exchanged
     (`_pick_bn(n, r, m, ...)`). M/V are updated in place via
-    input_output_aliases — treat the inputs as donated.
-    """
+    input_output_aliases — treat the inputs as donated. A packed-INT4
+    qstate P routes through the parametric epilogue."""
+    if is_qstate(P):
+        return _fused_epilogue_call(
+            "right", False, False, P, G, None, (M, V), count,
+            b1=b1, b2=b2, eps=eps, alpha=alpha, eta=0.0, wd=0.0, tile0=bm,
+            quant_p=True, interpret=interpret)
     m, n = G.shape[-2:]
     r = P.shape[-1]
     assert P.shape[-2] == n, (P.shape, G.shape)
@@ -316,19 +336,37 @@ def galore_fused_adam_step_right(
 # ---------------------------------------------------------------------------
 
 
-def _epilogue_kernel(*refs, side, quant, apply_w, w_dtype, b1, b2, eps,
-                     alpha, wd, long_dim, tile, qblock):
-    """One body for the six quantized / apply kernel variants.
+def _epilogue_kernel(*refs, side, quant, quant_p, project, apply_w, w_dtype,
+                     b1, b2, eps, alpha, wd, long_dim, tile, qblock, p_short,
+                     stochastic):
+    """One body for every quantized / apply / projector-layout kernel variant.
 
-    Ref order (inputs):  P, G, [W], (Mq, Ms, Vq, Vs | M, V), count, [eta],
-                         [book_s, book_u, mids_s, mids_u]
+    Ref order (inputs):  [Pq, Ps | P], G, [W],
+                         (Mq, Ms, Vq, Vs | M, V), count, [eta],
+                         [book_s, book_u, mids_s, mids_u], [book4]
     Ref order (outputs): out, (Mq', Ms', Vq', Vs' | M', V')
     All array blocks carry a leading batch dim of 1 (see module docstring).
     eta (the folded -lr) is a runtime scalar operand — the schedule changes
     it every step, so it cannot be baked into the kernel like b1/b2/eps.
+
+    quant_p: P arrives as packed nibble codes (split-half layout of
+    codec.quantize4_axis — row i shares a byte with row i + m_pad/2) plus
+    per-(QBLOCK-block, column) absmax scales, both whole-resident; the
+    unpack→dequant runs in VMEM so the f32 projector never exists in HBM.
+    project=False: no P at all, R = G elementwise — the flat-block 8-bit
+    Adam update (adam8bit_update.py) expressed as this kernel with the
+    moment shape equal to the gradient shape.
+    stochastic: Q-GaLore stochastic rounding on the requant, keyed by a
+    counter hash of (logical ravel index, step count, per-moment salt) that
+    is bit-shared with codec.quantize_axis(stochastic=True).
     """
     it = iter(refs)
-    p_ref, g_ref = next(it), next(it)
+    if project:
+        if quant_p:
+            pq_ref, ps_ref = next(it), next(it)
+        else:
+            p_ref = next(it)
+    g_ref = next(it)
     w_ref = next(it) if apply_w else None
     if quant:
         mq_ref, ms_ref, vq_ref, vs_ref = next(it), next(it), next(it), next(it)
@@ -339,6 +377,7 @@ def _epilogue_kernel(*refs, side, quant, apply_w, w_dtype, b1, b2, eps,
     if quant:
         book_s_ref, book_u_ref = next(it), next(it)
         mids_s_ref, mids_u_ref = next(it), next(it)
+    book4_ref = next(it) if quant_p else None
     out_ref = next(it)
     if quant:
         mq_out, ms_out, vq_out, vs_out = next(it), next(it), next(it), next(it)
@@ -356,38 +395,78 @@ def _epilogue_kernel(*refs, side, quant, apply_w, w_dtype, b1, b2, eps,
         return (vals.reshape(bm // qblock, qblock, r)
                 * scales[:, None, :]).reshape(bm, r)
 
-    def req(x, mids):
-        # branch-free nearest-codebook search: count midpoints <= value
+    def req(x, book, mids, salt):
         if side == "left":
             r, bn = x.shape
             xb = x.reshape(r, bn // qblock, qblock)
             absmax = jnp.max(jnp.abs(xb), axis=2) + 1e-12
-            normed = xb / absmax[:, :, None]
+            normed = (xb / absmax[:, :, None]).reshape(x.shape)
         else:
             bm, r = x.shape
             xb = x.reshape(bm // qblock, qblock, r)
             absmax = jnp.max(jnp.abs(xb), axis=1) + 1e-12
-            normed = xb / absmax[:, None, :]
-        idx = jnp.sum(
-            normed[..., None] >= mids[None, None, None, :], axis=-1,
-            dtype=jnp.int32,
-        )
-        return idx.reshape(x.shape).astype(jnp.uint8), absmax
+            normed = (xb / absmax[:, None, :]).reshape(x.shape)
+        if stochastic:
+            # unbiased rounding: pick the upper bracketing code with
+            # probability = fractional position, coin shared bitwise with
+            # codec.quantize_axis via the ravel index of the LOGICAL
+            # (L, *mom) array (padded tail values are exactly 0 — a
+            # codebook hit — so index collisions there are inert)
+            lbatch = pl.program_id(0).astype(jnp.uint32)
+            off = pl.program_id(1).astype(jnp.uint32) * jnp.uint32(tile)
+            if side == "left":
+                row = jax.lax.broadcasted_iota(jnp.uint32, x.shape, 0)
+                pos = jax.lax.broadcasted_iota(jnp.uint32, x.shape, 1) + off
+                idx = (lbatch * jnp.uint32(x.shape[0]) + row) \
+                    * jnp.uint32(long_dim) + pos
+            else:
+                pos = jax.lax.broadcasted_iota(jnp.uint32, x.shape, 0) + off
+                col = jax.lax.broadcasted_iota(jnp.uint32, x.shape, 1)
+                idx = (lbatch * jnp.uint32(long_dim) + pos) \
+                    * jnp.uint32(x.shape[1]) + col
+            u = sr_uniform(idx, count_ref[0], salt)
+            ge = jnp.sum(normed[..., None] >= book, axis=-1, dtype=jnp.int32)
+            lo = jnp.clip(ge - 1, 0, book.shape[0] - 2)
+            lo_val = book[lo]
+            frac = jnp.clip((normed - lo_val) / (book[lo + 1] - lo_val),
+                            0.0, 1.0)
+            codes = lo + (u < frac).astype(jnp.int32)
+        else:
+            # branch-free nearest-codebook search: count midpoints <= value
+            codes = jnp.sum(normed[..., None] >= mids, axis=-1,
+                            dtype=jnp.int32)
+        return codes.astype(jnp.uint8), absmax
 
-    p = p_ref[0].astype(jnp.float32)
     g = g_ref[0].astype(jnp.float32)
-    if side == "left":
-        # R = Pᵀ G (MXU, f32 accumulate): (r, bn)
-        R = jax.lax.dot_general(
-            p, g, dimension_numbers=(((0,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32,
-        )
+    if project:
+        if quant_p:
+            # in-VMEM INT4 unpack: split-half packing makes this a gather +
+            # one concatenate along the kept (sublane) axis — no interleave
+            book4 = book4_ref[...]
+            pq = pq_ref[0].astype(jnp.int32)           # (m_pad//2, r)
+            vals = jnp.concatenate([book4[pq & 0xF], book4[pq >> 4]], axis=0)
+            ps = ps_ref[0]                             # (nbp, r)
+            nbp = ps.shape[0]
+            blk = vals.shape[0] // nbp
+            p = (vals.reshape(nbp, blk, vals.shape[1])
+                 * ps[:, None, :]).reshape(vals.shape)
+            p = p[:p_short]
+        else:
+            p = p_ref[0].astype(jnp.float32)
+        if side == "left":
+            # R = Pᵀ G (MXU, f32 accumulate): (r, bn)
+            R = jax.lax.dot_general(
+                p, g, dimension_numbers=(((0,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+        else:
+            # R = G P: (bm, r)
+            R = jax.lax.dot_general(
+                g, p, dimension_numbers=(((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
     else:
-        # R = G P: (bm, r)
-        R = jax.lax.dot_general(
-            g, p, dimension_numbers=(((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32,
-        )
+        R = g  # flat-block Adam: the "compact" moment IS the gradient shape
 
     if quant:
         book_s, book_u = book_s_ref[...], book_u_ref[...]
@@ -414,7 +493,9 @@ def _epilogue_kernel(*refs, side, quant, apply_w, w_dtype, b1, b2, eps,
     c2 = 1.0 - b2 ** count
     n_hat = (m_new / c1) / (jnp.sqrt(v_new / c2) + eps)
 
-    if side == "left":
+    if not project:
+        gt = n_hat  # the bias-corrected update IS the output (no sandwich)
+    elif side == "left":
         gt = alpha * jax.lax.dot_general(
             p, n_hat, dimension_numbers=(((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32,
@@ -431,8 +512,8 @@ def _epilogue_kernel(*refs, side, quant, apply_w, w_dtype, b1, b2, eps,
         out_ref[0] = gt
 
     if quant:
-        mq, ms = req(m_new, mids_s_ref[...])
-        vq, vs = req(v_new, mids_u_ref[...])
+        mq, ms = req(m_new, book_s, mids_s_ref[...], SR_SALT_M)
+        vq, vs = req(v_new, book_u, mids_u_ref[...], SR_SALT_V)
         mq_out[0], ms_out[0] = mq, ms
         vq_out[0], vs_out[0] = vq, vs
     else:
@@ -440,17 +521,40 @@ def _epilogue_kernel(*refs, side, quant, apply_w, w_dtype, b1, b2, eps,
 
 
 def _fused_epilogue_call(side, quant, apply_w, P, G, W, moments, count, *,
-                         b1, b2, eps, alpha, eta, wd, tile0, interpret):
+                         b1, b2, eps, alpha, eta, wd, tile0, interpret,
+                         quant_p=False, project=True, alias_moments=True,
+                         qblock=QBLOCK, stochastic=False):
     """Build + launch one epilogue-variant pallas_call. `moments` is
-    (Mq, Ms, Vq, Vs) when quant else (M, V); returns (out, *new_moments)."""
+    (Mq, Ms, Vq, Vs) when quant else (M, V); returns (out, *new_moments).
+
+    quant_p: P is a codec.quantize4_axis qstate dict — packed codes +
+    per-block scales go to the kernel whole-resident and dequantize in VMEM.
+    project=False (P is None): no projection sandwich, R = G — the flat
+    8-bit Adam update as a degenerate epilogue (mom shape == G shape); the
+    moments are NOT aliased in that mode (alias_moments=False) because the
+    eager adam8bit callers reuse their inputs.
+    qblock: the moment quantization block (QBLOCK for the GaLore layouts,
+    optim.quant8.BLOCK for the flat fold).
+    stochastic: stochastic-rounding requant (quant only)."""
     m, n = G.shape[-2:]
-    r = P.shape[-1]
+    if project:
+        Pq = P["q"] if quant_p else None
+        r = (Pq if quant_p else P).shape[-1]
+    else:
+        assert not apply_w and not quant_p, "fold mode is update-only"
+        r = m  # moments share G's shape; "left" layout with short == r == m
     short, long_dim = (m, n) if side == "left" else (n, m)
-    assert P.shape[-2] == short, (P.shape, G.shape)
+    if project and quant_p:
+        nbp = -(-short // QBLOCK)
+        assert Pq.shape[-2:] == ((nbp * QBLOCK) // 2, r), (Pq.shape, short)
+        assert P["scale"].shape[-2:] == (nbp, r), (P["scale"].shape, nbp, r)
+        assert Pq.dtype == jnp.uint8
+    elif project:
+        assert P.shape[-2] == short, (P.shape, G.shape)
     mom_shape = (r, n) if side == "left" else (m, r)
     if quant:
         Mq, Ms, Vq, Vs = moments
-        nb_total = -(-long_dim // QBLOCK)
+        nb_total = -(-long_dim // qblock)
         scale_shape = (r, nb_total) if side == "left" else (nb_total, r)
         assert Mq.shape[-2:] == mom_shape and Vq.shape[-2:] == mom_shape, (
             Mq.shape, Vq.shape, mom_shape)
@@ -463,27 +567,34 @@ def _fused_epilogue_call(side, quant, apply_w, P, G, W, moments, count, *,
             M.shape, V.shape, mom_shape)
         assert M.dtype == jnp.float32 and V.dtype == jnp.float32
 
-    batched = [_batch(x) for x in (P, G) + tuple(moments)
+    if project:
+        p_arrs = (Pq, P["scale"]) if quant_p else (P,)
+    else:
+        p_arrs = ()
+    n_p = len(p_arrs)
+    batched = [_batch(x) for x in p_arrs + (G,) + tuple(moments)
                + ((W,) if apply_w else ())]
-    lead = batched[0][1]
-    assert all(b[1] == lead for b in batched), [x.shape for x in (P, G)]
+    lead = batched[n_p][1]
+    assert all(b[1] == lead for b in batched), [b[0].shape for b in batched]
     arrs = [b[0] for b in batched]
-    Pb, Gb = arrs[0], arrs[1]
-    mom_b = arrs[2:2 + len(moments)]
+    Gb = arrs[n_p]
+    mom_b = arrs[n_p + 1:n_p + 1 + len(moments)]
     Wb = arrs[-1] if apply_w else None
     L = Gb.shape[0]
 
-    tile = _pick_bn(short, r, long_dim, Gb.dtype.itemsize, tile0)
+    if project:
+        tile = _pick_bn(short, r, long_dim, Gb.dtype.itemsize, tile0)
+    else:
+        tile = min(tile0, long_dim)
     if quant:
         # a tile must cover whole quantization blocks (the scale tile is the
-        # code tile's blocked axis divided by QBLOCK)
-        tile = -(-tile // QBLOCK) * QBLOCK
-    nbt = tile // QBLOCK
+        # code tile's blocked axis divided by qblock)
+        tile = -(-tile // qblock) * qblock
+    nbt = max(tile // qblock, 1)
     grid = (L, pl.cdiv(long_dim, tile))
 
     # blockspecs: the short + rank dims are spanned whole; only the long
     # axis is swept (column tiles on the left, row tiles on the right)
-    p_spec = pl.BlockSpec((1, short, r), lambda l, j: (l, 0, 0))
     if side == "left":
         g_spec = pl.BlockSpec((1, m, tile), lambda l, j: (l, 0, j))
         code_spec = pl.BlockSpec((1, r, tile), lambda l, j: (l, 0, j))
@@ -496,8 +607,17 @@ def _fused_epilogue_call(side, quant, apply_w, P, G, W, moments, count, *,
         mom_spec = pl.BlockSpec((1, tile, r), lambda l, j: (l, j, 0))
     rep = lambda l, j: (0,)
 
-    in_specs = [p_spec, g_spec]
-    operands = [Pb, Gb]
+    in_specs = []
+    if project and quant_p:
+        # packed codes + scales are whole-resident like the f32 P was
+        in_specs += [
+            pl.BlockSpec((1, (nbp * QBLOCK) // 2, r), lambda l, j: (l, 0, 0)),
+            pl.BlockSpec((1, nbp, r), lambda l, j: (l, 0, 0)),
+        ]
+    elif project:
+        in_specs.append(pl.BlockSpec((1, short, r), lambda l, j: (l, 0, 0)))
+    in_specs.append(g_spec)
+    operands = list(arrs[:n_p]) + [Gb]
     if apply_w:
         in_specs.append(g_spec)
         operands.append(Wb)
@@ -519,6 +639,9 @@ def _fused_epilogue_call(side, quant, apply_w, P, G, W, moments, count, *,
         in_specs += [pl.BlockSpec((256,), rep), pl.BlockSpec((256,), rep),
                      pl.BlockSpec((255,), rep), pl.BlockSpec((255,), rep)]
         operands += [book_s, book_u, mids_s, mids_u]
+    if project and quant_p:
+        in_specs.append(pl.BlockSpec((16,), rep))
+        operands.append(jnp.asarray(int4_codebook()))
 
     out_dtype = W.dtype if apply_w else jnp.float32
     out_shapes = [jax.ShapeDtypeStruct((L, m, n), out_dtype)]
@@ -535,16 +658,20 @@ def _fused_epilogue_call(side, quant, apply_w, P, G, W, moments, count, *,
         out_shapes += [jax.ShapeDtypeStruct((L,) + mom_shape, jnp.float32)] * 2
         out_specs += [mom_spec, mom_spec]
 
-    # moments (and W, when applying) are donated and updated in place
-    mom_in_base = 3 if apply_w else 2
-    aliases = {mom_in_base + i: 1 + i for i in range(len(moments))}
+    # moments (and W, when applying) are donated and updated in place;
+    # the fold path skips aliasing because its eager callers reuse inputs
+    aliases = {}
+    if alias_moments:
+        mom_in_base = n_p + (2 if apply_w else 1)
+        aliases = {mom_in_base + i: 1 + i for i in range(len(moments))}
     if apply_w:
-        aliases[2] = 0  # W → W'
+        aliases[n_p + 1] = 0  # W → W'
 
     kernel = functools.partial(
-        _epilogue_kernel, side=side, quant=quant, apply_w=apply_w,
-        w_dtype=out_dtype, b1=b1, b2=b2, eps=eps, alpha=alpha,
-        wd=wd, long_dim=long_dim, tile=tile, qblock=QBLOCK,
+        _epilogue_kernel, side=side, quant=quant, quant_p=quant_p,
+        project=project, apply_w=apply_w, w_dtype=out_dtype, b1=b1, b2=b2,
+        eps=eps, alpha=alpha, wd=wd, long_dim=long_dim, tile=tile,
+        qblock=qblock, p_short=short, stochastic=stochastic,
     )
     outs = pl.pallas_call(
         kernel, grid=grid, in_specs=in_specs, out_specs=tuple(out_specs),
@@ -557,26 +684,31 @@ def _fused_epilogue_call(side, quant, apply_w, P, G, W, moments, count, *,
 
 def galore_fused_adam8_step(P, G, Mq, Ms, Vq, Vs, count, *, b1=0.9, b2=0.999,
                             eps=1e-8, alpha=1.0, bn=DEFAULT_BN,
+                            stochastic: bool = False,
                             interpret: bool = False):
     """Fused left-side GaLore step with INT8 moments: R = PᵀG → dequant M/V →
     Adam → requant → G̃ = α P N̂. Codes/scales use the axis-blocked layout
     (quant/codec.py, blocks along n); all four moment arrays are updated in
-    place. Returns (G̃ f32, Mq', Ms', Vq', Vs')."""
+    place. Returns (G̃ f32, Mq', Ms', Vq', Vs').
+
+    P may be a packed-INT4 qstate dict (codec.quantize4_axis) — the kernel
+    then dequantizes the projector in VMEM (no f32 P in HBM)."""
     return _fused_epilogue_call(
         "left", True, False, P, G, None, (Mq, Ms, Vq, Vs), count,
         b1=b1, b2=b2, eps=eps, alpha=alpha, eta=0.0, wd=0.0, tile0=bn,
-        interpret=interpret)
+        quant_p=is_qstate(P), stochastic=stochastic, interpret=interpret)
 
 
 def galore_fused_adam8_step_right(P, G, Mq, Ms, Vq, Vs, count, *, b1=0.9,
                                   b2=0.999, eps=1e-8, alpha=1.0, bm=DEFAULT_BN,
+                                  stochastic: bool = False,
                                   interpret: bool = False):
     """Right-side INT8-moment variant: R = G P → Adam → G̃ = α N̂ Pᵀ, blocks
-    along the swept m axis."""
+    along the swept m axis. P may be a packed-INT4 qstate dict."""
     return _fused_epilogue_call(
         "right", True, False, P, G, None, (Mq, Ms, Vq, Vs), count,
         b1=b1, b2=b2, eps=eps, alpha=alpha, eta=0.0, wd=0.0, tile0=bm,
-        interpret=interpret)
+        quant_p=is_qstate(P), stochastic=stochastic, interpret=interpret)
 
 
 def galore_fused_adam_apply_step(P, G, W, M, V, count, *, b1=0.9, b2=0.999,
@@ -584,11 +716,12 @@ def galore_fused_adam_apply_step(P, G, W, M, V, count, *, b1=0.9, b2=0.999,
                                  bn=DEFAULT_BN, interpret: bool = False):
     """Left-side fused step with the weight update folded in:
     W' = W + eta·(α P N̂ + wd·W), emitted in W's dtype and aliased in place —
-    no full-size f32 G̃ write. Returns (W', M', V')."""
+    no full-size f32 G̃ write. Returns (W', M', V'). P may be a packed-INT4
+    qstate dict (in-kernel dequant)."""
     return _fused_epilogue_call(
         "left", False, True, P, G, W, (M, V), count,
         b1=b1, b2=b2, eps=eps, alpha=alpha, eta=eta, wd=wd, tile0=bn,
-        interpret=interpret)
+        quant_p=is_qstate(P), interpret=interpret)
 
 
 def galore_fused_adam_apply_step_right(P, G, W, M, V, count, *, b1=0.9,
@@ -598,26 +731,71 @@ def galore_fused_adam_apply_step_right(P, G, W, M, V, count, *, b1=0.9,
     return _fused_epilogue_call(
         "right", False, True, P, G, W, (M, V), count,
         b1=b1, b2=b2, eps=eps, alpha=alpha, eta=eta, wd=wd, tile0=bm,
-        interpret=interpret)
+        quant_p=is_qstate(P), interpret=interpret)
 
 
 def galore_fused_adam8_apply_step(P, G, W, Mq, Ms, Vq, Vs, count, *, b1=0.9,
                                   b2=0.999, eps=1e-8, alpha=1.0, eta=-1e-3,
                                   wd=0.0, bn=DEFAULT_BN,
+                                  stochastic: bool = False,
                                   interpret: bool = False):
     """INT8 moments AND in-place weight apply: the full 8-bit GaLore hot
-    path — HBM sees P, G, W and the uint8 codes; nothing else."""
+    path — HBM sees G, W, the uint8 moment codes, and (with a qstate P)
+    the packed INT4 projector; nothing else."""
     return _fused_epilogue_call(
         "left", True, True, P, G, W, (Mq, Ms, Vq, Vs), count,
         b1=b1, b2=b2, eps=eps, alpha=alpha, eta=eta, wd=wd, tile0=bn,
-        interpret=interpret)
+        quant_p=is_qstate(P), stochastic=stochastic, interpret=interpret)
 
 
 def galore_fused_adam8_apply_step_right(P, G, W, Mq, Ms, Vq, Vs, count, *,
                                         b1=0.9, b2=0.999, eps=1e-8, alpha=1.0,
                                         eta=-1e-3, wd=0.0, bm=DEFAULT_BN,
+                                        stochastic: bool = False,
                                         interpret: bool = False):
     return _fused_epilogue_call(
         "right", True, True, P, G, W, (Mq, Ms, Vq, Vs), count,
         b1=b1, b2=b2, eps=eps, alpha=alpha, eta=eta, wd=wd, tile0=bm,
+        quant_p=is_qstate(P), stochastic=stochastic, interpret=interpret)
+
+
+def adam8bit_blocks_update(g_blocks, m_codes, m_scale, v_codes, v_scale,
+                           count, *, b1=0.9, b2=0.999, eps=1e-8,
+                           block: int = 256, tile_blocks: int = 16,
+                           interpret: bool = False):
+    """Flat-block 8-bit Adam as a degenerate epilogue (project=False).
+
+    g_blocks (nb, block) f32, codes (nb, block) uint8, scales (nb,) f32.
+    The nb axis is padded to a multiple of `tile_blocks` and folded into the
+    batch grid axis as (L, tb, block) "left" tiles with r == tb and one
+    quantization block per row (qblock == block == the swept extent), so
+    the dequant→Adam→requant math runs through the exact same traced ops as
+    the GaLore epilogues. Zero padding is inert: a zero block dequantizes to
+    zero (scale pad is 0), updates to zero, and requantizes to code 128 /
+    scale 1e-12, and padded rows are sliced off before returning. Moments
+    are NOT aliased (the eager adam8bit_step caller reuses its inputs).
+    Returns (update (nb, block) f32, m_codes', m_scale', v_codes', v_scale').
+    """
+    nb, blk = g_blocks.shape
+    assert blk == block, (g_blocks.shape, block)
+    tb = min(tile_blocks, nb)
+    L = -(-nb // tb)
+    pad = L * tb - nb
+
+    def fold(x, fill=0):
+        if pad:
+            widths = ((0, pad),) + ((0, 0),) * (x.ndim - 1)
+            x = jnp.pad(x, widths, constant_values=fill)
+        return x.reshape((L, tb) + x.shape[1:])
+
+    g = fold(g_blocks.astype(jnp.float32))
+    moments = (fold(m_codes), fold(m_scale)[..., None],
+               fold(v_codes), fold(v_scale)[..., None])
+    outs = _fused_epilogue_call(
+        "left", True, False, None, g, None, moments, count,
+        b1=b1, b2=b2, eps=eps, alpha=1.0, eta=0.0, wd=0.0, tile0=block,
+        project=False, alias_moments=False, qblock=block,
         interpret=interpret)
+    unfold = lambda x: x.reshape((L * tb,) + x.shape[2:])[:nb]
+    upd, mq, ms, vq, vs = (unfold(o) for o in outs)
+    return upd, mq, ms[..., 0], vq, vs[..., 0]

@@ -17,6 +17,7 @@ from repro.kernels import galore_project as galore_k
 from repro.kernels import ref
 from repro.kernels import rmsnorm as rmsnorm_k
 from repro.optim.quant8 import dynamic_codebook
+from repro.quant import codec
 
 
 def _on_tpu() -> bool:
@@ -25,6 +26,20 @@ def _on_tpu() -> bool:
 
 def _resolve(use_pallas):
     return _on_tpu() if use_pallas is None else use_pallas
+
+
+def _p_rank(P) -> int:
+    """Rank of a projector passed either as f32/bf16 array or as the packed
+    axis-blocked INT4 qstate dict (codec.quantize4_axis)."""
+    return (P["q"] if codec.is_qstate(P) else P).shape[-1]
+
+
+def _p_plain(P, short: int):
+    """Dense view of P for the reference / composed fallback paths; the
+    Pallas epilogue consumes the packed dict directly instead."""
+    if codec.is_qstate(P):
+        return codec.dequantize4_axis(P["q"], P["scale"], short)
+    return P
 
 
 def galore_project(P, G, *, use_pallas=None, interpret=False):
@@ -50,18 +65,20 @@ def galore_fused_adam_step(P, G, M, V, count, *, b1=0.9, b2=0.999, eps=1e-8,
 
     Falls back to the unfused kernels (via the pure-jnp composition) when the
     fused kernel's VMEM budget rejects the shape — see galore_fused.py."""
+    m, n = G.shape[-2:]
     if _resolve(use_pallas):
-        m, n = G.shape[-2:]
-        if galore_fused_k.fits_vmem(m, P.shape[-1], n, G.dtype.itemsize):
+        if galore_fused_k.fits_vmem(m, _p_rank(P), n, G.dtype.itemsize):
             return galore_fused_k.galore_fused_adam_step(
                 P, G, M, V, count, b1=b1, b2=b2, eps=eps, alpha=alpha,
                 interpret=interpret,
             )
         # P too large for VMEM residency — compose the tiled kernels
+        P = _p_plain(P, m)
         R = galore_k.galore_project(P, G, interpret=interpret)
         N, M_t, V_t = ref.lowrank_adam_update(R, M, V, count, b1, b2, eps)
         return galore_k.galore_project_back(P, N, alpha, interpret=interpret), M_t, V_t
-    return ref.galore_fused_adam_step(P, G, M, V, count, b1, b2, eps, alpha)
+    return ref.galore_fused_adam_step(_p_plain(P, m), G, M, V, count, b1, b2,
+                                      eps, alpha)
 
 
 def galore_fused_adam_step_right(P, G, M, V, count, *, b1=0.9, b2=0.999,
@@ -71,55 +88,62 @@ def galore_fused_adam_step_right(P, G, M, V, count, *, b1=0.9, b2=0.999,
     for leaves whose SHORT side is the last dim (m > n; P is (..., n, r),
     M/V are (..., m, r)). A dedicated transposed-blockspec kernel — callers
     no longer swapaxes g/m/v to reuse the left kernel. Returns (G̃, M', V')."""
+    m, n = G.shape[-2:]
     if _resolve(use_pallas):
-        m, n = G.shape[-2:]
-        if galore_fused_k.fits_vmem(n, P.shape[-1], m, G.dtype.itemsize):
+        if galore_fused_k.fits_vmem(n, _p_rank(P), m, G.dtype.itemsize):
             return galore_fused_k.galore_fused_adam_step_right(
                 P, G, M, V, count, b1=b1, b2=b2, eps=eps, alpha=alpha,
                 interpret=interpret,
             )
         # P too large for VMEM residency — compose the tiled kernels on
         # transposed views (the pre-dedicated-kernel fallback)
+        P = _p_plain(P, n)
         sw = lambda x: jnp.swapaxes(x, -1, -2)
         R = galore_k.galore_project(P, sw(G), interpret=interpret)
         N, M_t, V_t = ref.lowrank_adam_update(R, sw(M), sw(V), count, b1, b2, eps)
         upd = galore_k.galore_project_back(P, N, alpha, interpret=interpret)
         return sw(upd), sw(M_t), sw(V_t)
-    return ref.galore_fused_adam_step_right(P, G, M, V, count, b1, b2, eps, alpha)
+    return ref.galore_fused_adam_step_right(_p_plain(P, n), G, M, V, count,
+                                            b1, b2, eps, alpha)
 
 
 def galore_fused_adam8_step(P, G, Mq, Ms, Vq, Vs, count, *, b1=0.9, b2=0.999,
-                            eps=1e-8, alpha=1.0, use_pallas=None,
-                            interpret=False):
+                            eps=1e-8, alpha=1.0, stochastic=False,
+                            use_pallas=None, interpret=False):
     """INT8-moment fused leaf update (left side): R = PᵀG → dequant M/V in
     VMEM → Adam → requant → G̃ = α P N̂. Codes and scales are updated in
-    place; fp32 moments never touch HBM. Returns (G̃, Mq', Ms', Vq', Vs').
+    place; fp32 moments never touch HBM. P may be a packed-INT4 qstate dict
+    (in-kernel nibble dequant — no f32 projector in HBM either).
+    Returns (G̃, Mq', Ms', Vq', Vs').
 
     Falls back to the reference composition when the fused VMEM budget
     rejects the shape (the dequantized tiles are bounded by the same f32
     footprint `_pick_bn` budgets for)."""
+    m, n = G.shape[-2:]
     if _resolve(use_pallas):
-        m, n = G.shape[-2:]
-        if galore_fused_k.fits_vmem(m, P.shape[-1], n, G.dtype.itemsize):
+        if galore_fused_k.fits_vmem(m, _p_rank(P), n, G.dtype.itemsize):
             return galore_fused_k.galore_fused_adam8_step(
                 P, G, Mq, Ms, Vq, Vs, count, b1=b1, b2=b2, eps=eps,
-                alpha=alpha, interpret=interpret)
-    return ref.galore_fused_adam8_step(P, G, Mq, Ms, Vq, Vs, count,
-                                       b1, b2, eps, alpha)
+                alpha=alpha, stochastic=stochastic, interpret=interpret)
+    return ref.galore_fused_adam8_step(_p_plain(P, m), G, Mq, Ms, Vq, Vs,
+                                       count, b1, b2, eps, alpha,
+                                       stochastic=stochastic)
 
 
 def galore_fused_adam8_step_right(P, G, Mq, Ms, Vq, Vs, count, *, b1=0.9,
                                   b2=0.999, eps=1e-8, alpha=1.0,
-                                  use_pallas=None, interpret=False):
+                                  stochastic=False, use_pallas=None,
+                                  interpret=False):
     """Right-side INT8-moment fused leaf update (blocks along the swept m)."""
+    m, n = G.shape[-2:]
     if _resolve(use_pallas):
-        m, n = G.shape[-2:]
-        if galore_fused_k.fits_vmem(n, P.shape[-1], m, G.dtype.itemsize):
+        if galore_fused_k.fits_vmem(n, _p_rank(P), m, G.dtype.itemsize):
             return galore_fused_k.galore_fused_adam8_step_right(
                 P, G, Mq, Ms, Vq, Vs, count, b1=b1, b2=b2, eps=eps,
-                alpha=alpha, interpret=interpret)
-    return ref.galore_fused_adam8_step_right(P, G, Mq, Ms, Vq, Vs, count,
-                                             b1, b2, eps, alpha)
+                alpha=alpha, stochastic=stochastic, interpret=interpret)
+    return ref.galore_fused_adam8_step_right(_p_plain(P, n), G, Mq, Ms, Vq,
+                                             Vs, count, b1, b2, eps, alpha,
+                                             stochastic=stochastic)
 
 
 def galore_fused_adam_apply_step(P, G, W, M, V, count, *, b1=0.9, b2=0.999,
@@ -127,59 +151,67 @@ def galore_fused_adam_apply_step(P, G, W, M, V, count, *, b1=0.9, b2=0.999,
                                  use_pallas=None, interpret=False):
     """Weight-apply fused leaf update: W' = W + eta·(α P N̂ + wd·W) with W
     aliased in place — the remaining full-size f32 update write is gone.
-    Returns (W', M', V'); the emit + chain path is the numerics oracle."""
+    Returns (W', M', V'); the emit + chain path is the numerics oracle.
+    P may be a packed-INT4 qstate dict."""
+    m, n = G.shape[-2:]
     if _resolve(use_pallas):
-        m, n = G.shape[-2:]
-        if galore_fused_k.fits_vmem(m, P.shape[-1], n, G.dtype.itemsize):
+        if galore_fused_k.fits_vmem(m, _p_rank(P), n, G.dtype.itemsize):
             return galore_fused_k.galore_fused_adam_apply_step(
                 P, G, W, M, V, count, b1=b1, b2=b2, eps=eps, alpha=alpha,
                 eta=eta, wd=wd, interpret=interpret)
-    return ref.galore_fused_adam_apply_step(P, G, W, M, V, count, b1, b2, eps,
-                                            alpha, eta, wd)
+    return ref.galore_fused_adam_apply_step(_p_plain(P, m), G, W, M, V, count,
+                                            b1, b2, eps, alpha, eta, wd)
 
 
 def galore_fused_adam_apply_step_right(P, G, W, M, V, count, *, b1=0.9,
                                        b2=0.999, eps=1e-8, alpha=1.0,
                                        eta=-1e-3, wd=0.0, use_pallas=None,
                                        interpret=False):
+    m, n = G.shape[-2:]
     if _resolve(use_pallas):
-        m, n = G.shape[-2:]
-        if galore_fused_k.fits_vmem(n, P.shape[-1], m, G.dtype.itemsize):
+        if galore_fused_k.fits_vmem(n, _p_rank(P), m, G.dtype.itemsize):
             return galore_fused_k.galore_fused_adam_apply_step_right(
                 P, G, W, M, V, count, b1=b1, b2=b2, eps=eps, alpha=alpha,
                 eta=eta, wd=wd, interpret=interpret)
-    return ref.galore_fused_adam_apply_step_right(P, G, W, M, V, count, b1, b2,
-                                                  eps, alpha, eta, wd)
+    return ref.galore_fused_adam_apply_step_right(_p_plain(P, n), G, W, M, V,
+                                                  count, b1, b2, eps, alpha,
+                                                  eta, wd)
 
 
 def galore_fused_adam8_apply_step(P, G, W, Mq, Ms, Vq, Vs, count, *, b1=0.9,
                                   b2=0.999, eps=1e-8, alpha=1.0, eta=-1e-3,
-                                  wd=0.0, use_pallas=None, interpret=False):
+                                  wd=0.0, stochastic=False, use_pallas=None,
+                                  interpret=False):
     """INT8 moments + in-place weight apply — the full 8-bit GaLore hot path
-    in one launch (HBM sees P, G, W and uint8 codes only)."""
+    in one launch (HBM sees G, W, uint8 codes, and with a qstate P the
+    packed INT4 projector — nothing else)."""
+    m, n = G.shape[-2:]
     if _resolve(use_pallas):
-        m, n = G.shape[-2:]
-        if galore_fused_k.fits_vmem(m, P.shape[-1], n, G.dtype.itemsize):
+        if galore_fused_k.fits_vmem(m, _p_rank(P), n, G.dtype.itemsize):
             return galore_fused_k.galore_fused_adam8_apply_step(
                 P, G, W, Mq, Ms, Vq, Vs, count, b1=b1, b2=b2, eps=eps,
-                alpha=alpha, eta=eta, wd=wd, interpret=interpret)
-    return ref.galore_fused_adam8_apply_step(P, G, W, Mq, Ms, Vq, Vs, count,
-                                             b1, b2, eps, alpha, eta, wd)
+                alpha=alpha, eta=eta, wd=wd, stochastic=stochastic,
+                interpret=interpret)
+    return ref.galore_fused_adam8_apply_step(_p_plain(P, m), G, W, Mq, Ms, Vq,
+                                             Vs, count, b1, b2, eps, alpha,
+                                             eta, wd, stochastic=stochastic)
 
 
 def galore_fused_adam8_apply_step_right(P, G, W, Mq, Ms, Vq, Vs, count, *,
                                         b1=0.9, b2=0.999, eps=1e-8, alpha=1.0,
-                                        eta=-1e-3, wd=0.0, use_pallas=None,
-                                        interpret=False):
+                                        eta=-1e-3, wd=0.0, stochastic=False,
+                                        use_pallas=None, interpret=False):
+    m, n = G.shape[-2:]
     if _resolve(use_pallas):
-        m, n = G.shape[-2:]
-        if galore_fused_k.fits_vmem(n, P.shape[-1], m, G.dtype.itemsize):
+        if galore_fused_k.fits_vmem(n, _p_rank(P), m, G.dtype.itemsize):
             return galore_fused_k.galore_fused_adam8_apply_step_right(
                 P, G, W, Mq, Ms, Vq, Vs, count, b1=b1, b2=b2, eps=eps,
-                alpha=alpha, eta=eta, wd=wd, interpret=interpret)
-    return ref.galore_fused_adam8_apply_step_right(P, G, W, Mq, Ms, Vq, Vs,
-                                                   count, b1, b2, eps, alpha,
-                                                   eta, wd)
+                alpha=alpha, eta=eta, wd=wd, stochastic=stochastic,
+                interpret=interpret)
+    return ref.galore_fused_adam8_apply_step_right(_p_plain(P, n), G, W, Mq,
+                                                   Ms, Vq, Vs, count, b1, b2,
+                                                   eps, alpha, eta, wd,
+                                                   stochastic=stochastic)
 
 
 def adam8bit_step(g_blocks, m_codes, m_scale, v_codes, v_scale, count,

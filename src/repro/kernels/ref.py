@@ -73,14 +73,16 @@ def galore_fused_adam_step_right(P, G, M, V, count, b1=0.9, b2=0.999, eps=1e-8,
 
 
 def galore_fused_adam8_step(P, G, Mq, Ms, Vq, Vs, count, b1=0.9, b2=0.999,
-                            eps=1e-8, alpha=1.0):
+                            eps=1e-8, alpha=1.0, stochastic=False):
     """Oracle for the INT8-moment fused epilogue (left side).
 
     M/V arrive as axis-blocked codes + scales (quant/codec.py: blocks of
     QBLOCK along n). Exactly the composition project → dequant → Adam →
     requant → back-project the kernel performs in one VMEM pass; code-level
     agreement is within 1 ulp of the codebook (searchsorted vs the kernel's
-    midpoint-count rule differ only on exact midpoint hits)."""
+    midpoint-count rule differ only on exact midpoint hits). With
+    `stochastic` the requant uses the counter-hash stochastic rounding the
+    kernel shares bitwise (codec.quantize_axis(stochastic=True))."""
     from repro.quant import codec
 
     R = galore_project(P, G)
@@ -88,13 +90,18 @@ def galore_fused_adam8_step(P, G, Mq, Ms, Vq, Vs, count, b1=0.9, b2=0.999,
     v = codec.dequantize_axis(Vq, Vs, axis=-1, signed=False)
     N_t, M_t, V_t = lowrank_adam_update(R, m, v, count, b1, b2, eps)
     out = galore_project_back(P, N_t, alpha)
-    mq, ms = codec.quantize_axis(M_t, axis=-1, signed=True)
-    vq, vs = codec.quantize_axis(V_t, axis=-1, signed=False)
+    mq, ms = codec.quantize_axis(M_t, axis=-1, signed=True,
+                                 stochastic=stochastic, count=count,
+                                 salt=codec.SR_SALT_M)
+    vq, vs = codec.quantize_axis(V_t, axis=-1, signed=False,
+                                 stochastic=stochastic, count=count,
+                                 salt=codec.SR_SALT_V)
     return out, mq, ms, vq, vs
 
 
 def galore_fused_adam8_step_right(P, G, Mq, Ms, Vq, Vs, count, b1=0.9,
-                                  b2=0.999, eps=1e-8, alpha=1.0):
+                                  b2=0.999, eps=1e-8, alpha=1.0,
+                                  stochastic=False):
     """Right-side INT8-moment oracle: blocks run along the swept m axis."""
     from repro.quant import codec
 
@@ -103,8 +110,12 @@ def galore_fused_adam8_step_right(P, G, Mq, Ms, Vq, Vs, count, b1=0.9,
     v = codec.dequantize_axis(Vq, Vs, axis=-2, signed=False)
     N_t, M_t, V_t = lowrank_adam_update(R, m, v, count, b1, b2, eps)
     out = galore_project_back_right(P, N_t, alpha)
-    mq, ms = codec.quantize_axis(M_t, axis=-2, signed=True)
-    vq, vs = codec.quantize_axis(V_t, axis=-2, signed=False)
+    mq, ms = codec.quantize_axis(M_t, axis=-2, signed=True,
+                                 stochastic=stochastic, count=count,
+                                 salt=codec.SR_SALT_M)
+    vq, vs = codec.quantize_axis(V_t, axis=-2, signed=False,
+                                 stochastic=stochastic, count=count,
+                                 salt=codec.SR_SALT_V)
     return out, mq, ms, vq, vs
 
 
@@ -130,16 +141,17 @@ def galore_fused_adam_apply_step_right(P, G, W, M, V, count, b1=0.9, b2=0.999,
 
 def galore_fused_adam8_apply_step(P, G, W, Mq, Ms, Vq, Vs, count, b1=0.9,
                                   b2=0.999, eps=1e-8, alpha=1.0, eta=-1e-3,
-                                  wd=0.0):
-    out = galore_fused_adam8_step(P, G, Mq, Ms, Vq, Vs, count, b1, b2, eps, alpha)
+                                  wd=0.0, stochastic=False):
+    out = galore_fused_adam8_step(P, G, Mq, Ms, Vq, Vs, count, b1, b2, eps,
+                                  alpha, stochastic=stochastic)
     return (_apply_weight(W, out[0], eta, wd),) + out[1:]
 
 
 def galore_fused_adam8_apply_step_right(P, G, W, Mq, Ms, Vq, Vs, count, b1=0.9,
                                         b2=0.999, eps=1e-8, alpha=1.0,
-                                        eta=-1e-3, wd=0.0):
+                                        eta=-1e-3, wd=0.0, stochastic=False):
     out = galore_fused_adam8_step_right(P, G, Mq, Ms, Vq, Vs, count, b1, b2,
-                                        eps, alpha)
+                                        eps, alpha, stochastic=stochastic)
     return (_apply_weight(W, out[0], eta, wd),) + out[1:]
 
 

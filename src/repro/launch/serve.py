@@ -6,6 +6,11 @@ decode; the decode step is the same function the dry-run lowers for
 ``decode_32k`` / ``long_500k``.
 
 CLI:  PYTHONPATH=src python -m repro.launch.serve --arch qwen2_7b --max-new 16
+
+``--ckpt-dir`` loads trained weights from the newest VALID checkpoint in a
+CheckpointManager root instead of random init — including quantized (int8 /
+int4 file-codec) checkpoints, which restore transparently via META, so a
+train run saved with ``--ckpt-quantize int4`` serves directly.
 """
 from __future__ import annotations
 
@@ -60,15 +65,38 @@ class Server:
         return [o for o in outs[: len(prompts)]]
 
 
+def load_checkpoint_params(cfg, ckpt_dir: str):
+    """Newest valid checkpoint in `ckpt_dir` -> params tree for `cfg`.
+
+    Restores the "params" group only (optimizer state stays on disk);
+    quantized file-codec leaves dequantize via META with crc verification."""
+    from repro.checkpoint.manager import CheckpointManager
+
+    mgr = CheckpointManager(ckpt_dir, async_save=False)
+    step = mgr.latest_valid_step()
+    if step is None:
+        raise FileNotFoundError(f"no valid checkpoint under {ckpt_dir}")
+    target = jax.eval_shape(lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+    restored = mgr.restore(step, {"params": target})
+    return restored["params"], step
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2_7b")
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="CheckpointManager root to serve trained weights from "
+                         "(quantized checkpoints load directly)")
     args = ap.parse_args()
     cfg = get_config(args.arch, smoke=not args.full)
     key = jax.random.PRNGKey(0)
-    params = M.init_params(cfg, key)
+    if args.ckpt_dir:
+        params, step = load_checkpoint_params(cfg, args.ckpt_dir)
+        print(f"[serve] restored params from {args.ckpt_dir} step {step}")
+    else:
+        params = M.init_params(cfg, key)
     srv = Server(cfg, params, max_len=128, slots=4)
     t0 = time.time()
     outs = srv.generate([jnp.arange(5) % cfg.vocab_size, jnp.arange(3) % cfg.vocab_size],

@@ -39,6 +39,10 @@ class RunConfig:
     ckpt_dir: str = "/tmp/repro_ckpt"
     ckpt_every: int = 50
     log_every: int = 10
+    # file codec for large float params leaves in checkpoints (None | "int8"
+    # | "int4"): int4 shrinks params bytes ~7× (checkpoint/manager.py);
+    # optimizer state always round-trips verbatim
+    ckpt_quantize: str | None = None
 
 
 def build_state(cfg, tc, rules, key):
@@ -115,9 +119,29 @@ class AsyncRefreshDriver:
     is no previous batch). The pending tree is exposed for checkpointing:
     a save while a refresh is in flight stores it as its own group, and
     restore_pending() re-arms the swap so a resumed run lands the identical
-    active buffer."""
+    active buffer.
+
+    tc.galore_recalibrate_every = N > 0: every N dispatches the driver
+    re-measures the per-shape SVD unit costs (core/subspace.py
+    calibrate_unit_costs) and rebuilds its refresh programs with the new
+    GaLoreConfig.unit_costs, so the sharded refresh's bin-packing tracks
+    cost drift (host contention, thermal throttling) over a long run."""
 
     def __init__(self, cfg, tc: TrainConfig, rules):
+        self._cfg = cfg
+        self._rules = rules
+        self.recal_every = int(tc.galore_recalibrate_every or 0)
+        self.dispatch_count = 0
+        self.recalibrations = 0
+        self.pending = None
+        self._prev_batch = None
+        self._build(tc)
+
+    def _build(self, tc: TrainConfig):
+        """(Re)compile every program for an effective config — called at
+        init and again after each cost recalibration. In-flight state
+        (pending buffer, stale-batch snapshot) is deliberately untouched:
+        a pending tree dispatched by the old programs swaps in fine."""
         from repro.distributed.step import (
             make_async_refresh_step,
             make_refresh_step,
@@ -125,13 +149,13 @@ class AsyncRefreshDriver:
         )
         from repro.optim.factory import galore_state_index
 
+        cfg, rules = self._cfg, self._rules
+        self._tc = tc
         self.gcfg = tc.galore
         self.T = self.gcfg.update_freq
         self.idx = galore_state_index(tc)
         self.adaptive = bool(self.gcfg.adaptive_t)
         self.stagger = bool(self.gcfg.refresh_stagger)
-        self.pending = None
-        self._prev_batch = None
         pend = make_async_refresh_step(cfg, tc, rules)
         self._dispatch_static = jax.jit(pend, static_argnums=(3,))
         self._dispatch_traced = jax.jit(pend)
@@ -145,6 +169,28 @@ class AsyncRefreshDriver:
         self._cold_static = jax.jit(cold, static_argnums=(3,), donate_argnums=(1,))
         self._cold_traced = jax.jit(cold, donate_argnums=(1,))
         self._due_offsets = _galore_due_offsets(cfg, tc)
+
+    def _recalibrate(self):
+        """Re-measure per-shape SVD costs and rebuild with the new
+        unit_costs (the partition_refresh bin-packing reads them)."""
+        from repro.core.subspace import calibrate_unit_costs
+
+        p_struct = jax.eval_shape(
+            lambda: M.init_params(self._cfg, jax.random.PRNGKey(0)))
+        costs = calibrate_unit_costs(p_struct, self._tc.galore,
+                                     param_axes=M.param_axes(self._cfg))
+        self.recalibrations += 1
+        print(f"[train] recalibrated {len(costs)} SVD unit costs "
+              f"(#{self.recalibrations}): "
+              + ", ".join(f"{k}={v * 1e3:.1f}ms" for k, v in costs))
+        self._build(dataclasses.replace(
+            self._tc, galore=dataclasses.replace(self._tc.galore,
+                                                 unit_costs=costs)))
+
+    def _note_dispatch(self):
+        self.dispatch_count += 1
+        if self.recal_every and self.dispatch_count % self.recal_every == 0:
+            self._recalibrate()
 
     def _sub(self, opt_state):
         g = opt_state[self.idx]
@@ -189,6 +235,7 @@ class AsyncRefreshDriver:
             # dueness is runtime state — dispatch every step, leaves cond
             self.pending = self._dispatch_traced(
                 params, self._sub(opt_state), stale, jnp.int32(step))
+            self._note_dispatch()
             return opt_state
         if self.stagger:
             if step % self.T in self._due_offsets:
@@ -196,10 +243,12 @@ class AsyncRefreshDriver:
                 self.pending = self._dispatch_static(
                     params, self._sub(opt_state), stale,
                     _fold_phase(self.T, step))
+                self._note_dispatch()
             return opt_state
         if step % self.T == 0:
             self.pending = self._dispatch_static(
                 params, self._sub(opt_state), stale, None)
+            self._note_dispatch()
         return opt_state
 
 
@@ -276,8 +325,10 @@ def train_loop(run: RunConfig, tc: TrainConfig, cfg=None, on_step=None,
             if not tc.fault_hooks:
                 tc = dataclasses.replace(tc, fault_hooks=True)
     # checksum only when guarded: the recovery path needs exact corruption
-    # detection; unguarded runs keep the original META bytes
-    ckpt = CheckpointManager(run.ckpt_dir, checksum=guarded)
+    # detection; unguarded runs keep the original META bytes (quantized
+    # leaves carry their own mandatory per-entry crc32s either way)
+    ckpt = CheckpointManager(run.ckpt_dir, checksum=guarded,
+                             quantize=run.ckpt_quantize)
 
     key = jax.random.PRNGKey(tc.seed)
     gcfg = tc.galore
@@ -522,6 +573,12 @@ def main():
                     help="measure per-shape SVD wall time once at startup "
                          "and bin-pack the distributed refresh on measured "
                          "costs instead of the asymptotic model")
+    ap.add_argument("--galore-recalibrate-costs", type=int, default=0,
+                    metavar="N",
+                    help="async refresh: re-measure SVD unit costs every N "
+                         "refresh dispatches and rebuild the refresh "
+                         "programs, so bin-packing tracks cost drift "
+                         "(requires --galore-refresh-async; 0 disables)")
     ap.add_argument("--galore-fused-apply", action="store_true",
                     help="fold the weight update into the fused-kernel "
                          "epilogue (requires --galore-fused)")
@@ -535,6 +592,10 @@ def main():
     ap.add_argument("--quant-lazy-refresh", action="store_true",
                     help="int4 projectors: skip committing refreshes that "
                          "leave the quantized codes unchanged")
+    ap.add_argument("--quant-stochastic", action="store_true",
+                    help="int8 moments: stochastic rounding on the requant "
+                         "(Q-GaLore; counter-hash RNG seeded by the step "
+                         "count, bitwise-shared between kernel and oracle)")
     ap.add_argument("--anomaly-guard", action="store_true",
                     help="per-step anomaly guard: non-finite loss/grad-norm "
                          "or an EMA z-score loss spike turns the step into a "
@@ -561,6 +622,11 @@ def main():
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--ckpt-quantize", choices=["int8", "int4"], default=None,
+                    help="write quantized checkpoint files: large float "
+                         "params leaves become blockwise codes + scales "
+                         "(~4× / ~7× smaller); optimizer state stays "
+                         "verbatim and restore is META-driven")
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args()
 
@@ -576,7 +642,8 @@ def main():
                      reproject_moments=args.galore_reproject_moments,
                      quant=QuantPolicy(moments=args.quant_moments,
                                        projectors=args.quant_proj,
-                                       lazy_refresh=args.quant_lazy_refresh))
+                                       lazy_refresh=args.quant_lazy_refresh,
+                                       stochastic_round=args.quant_stochastic))
         if args.galore_rank > 0 or args.galore_rank_frac > 0
         else None
     )
@@ -593,6 +660,9 @@ def main():
     if args.galore_reproject_moments and not args.galore_refresh_async:
         ap.error("--galore-reproject-moments acts on async buffer swaps; "
                  "add --galore-refresh-async")
+    if args.galore_recalibrate_costs and not args.galore_refresh_async:
+        ap.error("--galore-recalibrate-costs is driven by the async refresh "
+                 "driver; add --galore-refresh-async")
     from repro.robust import TRACED_KINDS, parse_fault
 
     try:
@@ -616,6 +686,7 @@ def main():
         galore_refresh_shard=args.galore_refresh_shard,
         galore_refresh_async=args.galore_refresh_async,
         galore_calibrate_costs=args.galore_calibrate_costs,
+        galore_recalibrate_every=args.galore_recalibrate_costs,
         anomaly_guard=args.anomaly_guard,
         fault_hooks=traced,
         recover_max_skips=args.recover_max_skips,
@@ -627,6 +698,7 @@ def main():
         arch=args.arch, smoke=not args.full, steps=args.steps,
         batch_per_host=args.batch, seq_len=args.seq, ckpt_dir=args.ckpt_dir,
         ckpt_every=args.ckpt_every, log_every=args.log_every,
+        ckpt_quantize=args.ckpt_quantize,
     )
     train_loop(run, tc, faults=faults or None)
 

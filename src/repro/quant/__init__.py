@@ -24,38 +24,54 @@ checkpoint/manager.py round-trips the quantized trees.
 from repro.quant.codec import (
     BLOCK,
     QBLOCK,
+    SR_SALT_M,
+    SR_SALT_V,
+    dequant4_axis_state,
     dequant4_state,
     dequant_state,
     dequantize,
     dequantize4,
+    dequantize4_axis,
     dequantize_axis,
     dynamic_codebook,
     int4_codebook,
+    is_axis4_qstate,
     is_qstate,
+    quant4_axis_state,
     quant4_state,
     quant_state,
     quantize,
     quantize4,
+    quantize4_axis,
     quantize_axis,
+    sr_uniform,
 )
 from repro.quant.policy import MIN_QUANT_SIZE, QuantPolicy
 
 __all__ = [
     "BLOCK",
     "QBLOCK",
+    "SR_SALT_M",
+    "SR_SALT_V",
     "MIN_QUANT_SIZE",
     "QuantPolicy",
+    "dequant4_axis_state",
     "dequant4_state",
     "dequant_state",
     "dequantize",
     "dequantize4",
+    "dequantize4_axis",
     "dequantize_axis",
     "dynamic_codebook",
     "int4_codebook",
+    "is_axis4_qstate",
     "is_qstate",
+    "quant4_axis_state",
     "quant4_state",
     "quant_state",
     "quantize",
     "quantize4",
+    "quantize4_axis",
     "quantize_axis",
+    "sr_uniform",
 ]

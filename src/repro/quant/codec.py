@@ -40,6 +40,11 @@ import numpy as np
 BLOCK = 256   # flat-codec block (bitsandbytes convention)
 QBLOCK = 128  # axis-blocked codec block (TPU lane width)
 
+# per-moment salts for the stochastic-rounding hash (distinct streams for M
+# and V so the two moments of one element never share a coin flip)
+SR_SALT_M = 0x5BD1E995
+SR_SALT_V = 0xC2B2AE35
+
 
 # ---------------------------------------------------------------------------
 # Codebooks
@@ -184,22 +189,69 @@ def _blocked(x: jnp.ndarray, axis: int, block: int):
     return x.reshape(x.shape[:axis] + (nb, block) + x.shape[axis + 1:]), nb
 
 
+def sr_uniform(idx: jnp.ndarray, count: jnp.ndarray, salt: int) -> jnp.ndarray:
+    """Counter-based uniform in [0, 1) from (element index, step count, salt).
+
+    A small stateless integer hash (Knuth multiply + murmur-style finalizer)
+    shared bit-for-bit by the host requantizer and the Pallas epilogue: the
+    same (idx, count, salt) triple always yields the same coin, so the
+    kernel and the reference oracle produce identical stochastic codes.
+    """
+    idx = idx.astype(jnp.uint32)
+    cnt = jnp.asarray(count).astype(jnp.uint32)
+    x = idx * jnp.uint32(2654435761)
+    x = x ^ (cnt * jnp.uint32(0x9E3779B9)) ^ jnp.uint32(salt & 0xFFFFFFFF)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> 15)
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return (x >> 8).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
+
+
+def _stochastic_codes(normed: jnp.ndarray, book: jnp.ndarray,
+                      u: jnp.ndarray) -> jnp.ndarray:
+    """Stochastic codebook rounding: round up with prob = fractional position.
+
+    Exact codebook hits (including 0) stay deterministic because frac is 0
+    there; normed == 1.0 lands on the top code because u < 1 always."""
+    ge = jnp.sum(normed[..., None] >= book, axis=-1)  # codes with book <= x
+    lo = jnp.clip(ge - 1, 0, book.shape[0] - 2)
+    lo_val = book[lo]
+    step = book[lo + 1] - lo_val
+    frac = jnp.clip((normed - lo_val) / step, 0.0, 1.0)
+    return (lo + (u < frac).astype(jnp.int32)).astype(jnp.uint8)
+
+
 def quantize_axis(x: jnp.ndarray, *, axis: int = -1, block: int = QBLOCK,
-                  signed: bool = True):
+                  signed: bool = True, stochastic: bool = False,
+                  count=None, salt: int = 0):
     """Blockwise dynamic-INT8 along one trailing axis.
 
     x (..., n, ...) -> (codes uint8, same shape as x;
                         scales f32, `axis` shrunk to ceil(n/block)).
     The block axis matches the fused kernel's sweep axis (last for left-side
     compact moments (r, n), second-to-last for right-side (m, r)) so a
-    kernel tile always covers whole blocks."""
+    kernel tile always covers whole blocks.
+
+    With ``stochastic=True`` (Q-GaLore) codes round up with probability
+    equal to the fractional position between the bracketing codebook values,
+    keyed by a counter hash of (ravel index, ``count``, ``salt``) — unbiased
+    in expectation and bitwise-reproducible across host and kernel."""
     axis = axis % x.ndim
     book = jnp.asarray(dynamic_codebook(signed))
-    mids = (book[:-1] + book[1:]) / 2.0
-    blocks, _ = _blocked(x.astype(jnp.float32), axis, block)
+    xf = x.astype(jnp.float32)
+    blocks, _ = _blocked(xf, axis, block)
     absmax = jnp.max(jnp.abs(blocks), axis=axis + 1) + 1e-12
     normed = blocks / jnp.expand_dims(absmax, axis + 1)
-    codes = jnp.searchsorted(mids, normed).astype(jnp.uint8)
+    if stochastic:
+        idx = jnp.arange(xf.size, dtype=jnp.uint32).reshape(xf.shape)
+        bidx, _ = _blocked(idx, axis, block)
+        u = sr_uniform(bidx, 0 if count is None else count, salt)
+        codes = _stochastic_codes(normed, book, u)
+    else:
+        mids = (book[:-1] + book[1:]) / 2.0
+        codes = jnp.searchsorted(mids, normed).astype(jnp.uint8)
     codes = codes.reshape(x.shape[:axis] + (-1,) + x.shape[axis + 1:])
     codes = jax.lax.slice_in_dim(codes, 0, x.shape[axis], axis=axis)
     return codes, absmax
@@ -216,8 +268,10 @@ def dequantize_axis(codes: jnp.ndarray, scales: jnp.ndarray, *, axis: int = -1,
 
 
 def quant_axis_state(x: jnp.ndarray, *, axis: int, signed: bool,
-                     block: int = QBLOCK) -> dict:
-    codes, scales = quantize_axis(x, axis=axis, block=block, signed=signed)
+                     block: int = QBLOCK, stochastic: bool = False,
+                     count=None, salt: int = 0) -> dict:
+    codes, scales = quantize_axis(x, axis=axis, block=block, signed=signed,
+                                  stochastic=stochastic, count=count, salt=salt)
     return {"q": codes, "scale": scales}
 
 
@@ -227,6 +281,67 @@ def dequant_axis_state(st: dict, *, axis: int, signed: bool,
                            signed=signed)
 
 
+# ---------------------------------------------------------------------------
+# Axis-blocked packed INT4 — kernel-consumable projector storage
+# ---------------------------------------------------------------------------
+
+
+def quantize4_axis(x: jnp.ndarray, *, block: int = QBLOCK):
+    """Packed INT4 projector codec, blocked along the kept axis (-2).
+
+    x (..., m, r) -> (packed uint8 (..., m_pad//2, r),
+                      scales f32 (..., ceil(m/block), r))
+    with per-(block, column) absmax and the symmetric 15-level linear map of
+    :func:`int4_codebook`. Packing is *split-half*: row i shares a byte with
+    row i + m_pad//2 (low/high nibble), so the kernel unpack is a single
+    ``concatenate([book[q & 0xF], book[q >> 4]], axis=-2)`` with no
+    interleave relayout. Padded rows quantize to code 7 (exact 0)."""
+    blocks, nb = _blocked(x.astype(jnp.float32), x.ndim - 2, block)
+    absmax = jnp.max(jnp.abs(blocks), axis=-2) + 1e-12  # (..., nb, r)
+    normed = blocks / absmax[..., :, None, :]
+    q = jnp.clip(jnp.round(normed * 7.0), -7, 7).astype(jnp.int32) + 7
+    q = q.reshape(x.shape[:-2] + (nb * block, x.shape[-1]))
+    half = (nb * block) // 2
+    lo = jax.lax.slice_in_dim(q, 0, half, axis=x.ndim - 2)
+    hi = jax.lax.slice_in_dim(q, half, nb * block, axis=x.ndim - 2)
+    packed = (lo | (hi << 4)).astype(jnp.uint8)
+    return packed, absmax
+
+
+def dequantize4_axis(packed: jnp.ndarray, scales: jnp.ndarray, short: int,
+                     *, block: int = QBLOCK) -> jnp.ndarray:
+    """Inverse of :func:`quantize4_axis`; `short` is the logical kept dim.
+
+    Mirrors the in-kernel unpack op-for-op (gather → concat → scale in f32)
+    so the fused kernel and this host path are bitwise identical."""
+    book = jnp.asarray(int4_codebook())
+    p = packed.astype(jnp.int32)
+    vals = jnp.concatenate([book[p & 0xF], book[p >> 4]], axis=-2)
+    nb = scales.shape[-2]
+    blocks = vals.reshape(vals.shape[:-2] + (nb, block, vals.shape[-1]))
+    blocks = blocks * scales[..., :, None, :]
+    full = blocks.reshape(vals.shape)
+    return jax.lax.slice_in_dim(full, 0, short, axis=full.ndim - 2)
+
+
+def quant4_axis_state(x: jnp.ndarray, *, block: int = QBLOCK) -> dict:
+    packed, scales = quantize4_axis(x, block=block)
+    return {"q": packed, "scale": scales}
+
+
+def dequant4_axis_state(st: dict, shape, *, block: int = QBLOCK) -> jnp.ndarray:
+    return dequantize4_axis(st["q"], st["scale"], shape[-2], block=block)
+
+
 def is_qstate(x) -> bool:
     """True for a quantized-leaf dict ({"q": codes, "scale": absmax})."""
     return isinstance(x, dict) and set(x.keys()) == {"q", "scale"}
+
+
+def is_axis4_qstate(x) -> bool:
+    """True for the axis-blocked packed-INT4 layout of quantize4_axis.
+
+    Discriminates from the flat layout by rank: axis-blocked keeps matching
+    ranks for codes and scales; the flat codec stores 2-D codes + 1-D
+    scales."""
+    return is_qstate(x) and x["q"].ndim == x["scale"].ndim and x["q"].ndim >= 2

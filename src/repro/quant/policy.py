@@ -45,6 +45,13 @@ class QuantPolicy:
                 move the quantized projector. Composes with adaptive_t,
                 which additionally stretches the period so the SVD itself
                 is skipped on stable leaves.
+    stochastic_round  int8 moments only: Q-GaLore stochastic rounding on the
+                requant — codes round up with probability equal to the
+                fractional position between bracketing codebook values,
+                keyed on (element index, step count), so small-|m| updates
+                are unbiased in expectation instead of repeatedly snapping
+                to the same nearest code. Off by default (deterministic
+                nearest-code stays the bitwise-reference behavior).
     overrides   ((path_substring, moments|"", projectors|""), ...) — first
                 match wins, "" inherits the global mode; mirrors
                 GaLoreConfig.rank_overrides.
@@ -54,6 +61,7 @@ class QuantPolicy:
     projectors: str = "fp32"
     min_quant_size: int = MIN_QUANT_SIZE
     lazy_refresh: bool = False
+    stochastic_round: bool = False
     overrides: tuple = ()
 
     def __post_init__(self):

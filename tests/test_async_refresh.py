@@ -205,6 +205,39 @@ def test_async_flag_off_is_pr4_program_bitwise():
         s_off, s_async = sync_out, async_out
 
 
+def test_recalibration_rebuilds_programs_with_measured_costs():
+    """tc.galore_recalibrate_every=N: every N dispatches the driver re-runs
+    calibrate_unit_costs and rebuilds its refresh programs, so the sharded
+    refresh's bin-packing partitioner reads the NEW measured costs."""
+    from repro.core.subspace import SubspaceManager
+    from repro.launch.train import AsyncRefreshDriver
+
+    cfg = get_config("llama_60m", smoke=True)
+    tc = TrainConfig(optimizer="adamw",
+                     galore=GaLoreConfig(rank=8, update_freq=4),
+                     galore_refresh_shard=True, galore_refresh_async=True,
+                     galore_recalibrate_every=2)
+    drv = AsyncRefreshDriver(cfg, tc, None)
+    assert drv.recal_every == 2
+    assert drv._tc.galore.unit_costs == ()
+    dispatch_before = drv._dispatch_traced
+    drv._note_dispatch()
+    assert drv.recalibrations == 0  # not due yet
+    drv._note_dispatch()
+    assert drv.recalibrations == 1
+    costs = drv._tc.galore.unit_costs
+    assert len(costs) > 0 and all(v > 0 for _, v in costs)
+    # the programs were rebuilt around the new effective config...
+    assert drv._dispatch_traced is not dispatch_before
+    assert drv.gcfg is drv._tc.galore
+    # ...and the partitioner's cost table is exactly the measured costs
+    mgr = SubspaceManager(drv.gcfg)
+    assert mgr._cost_table == {tuple(k): float(v) for k, v in costs}
+    drv._note_dispatch()
+    drv._note_dispatch()
+    assert drv.recalibrations == 2 and drv.dispatch_count == 4
+
+
 ASYNC_PARITY_SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

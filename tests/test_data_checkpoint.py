@@ -240,6 +240,130 @@ def test_checksum_off_keeps_meta_layout(tmp_path):
     assert ckpt.valid_step(1)  # zip-CRC fallback still validates
 
 
+def _npz_bytes(root):
+    return sum(os.path.getsize(os.path.join(r, f))
+               for r, _, fs in os.walk(root) for f in fs if f.endswith(".npz"))
+
+
+def _param_tree(key=None):
+    """Two quantizable weights (>= MIN_QUANT_SIZE elems) + one small leaf
+    that must stay verbatim f32."""
+    key = jax.random.PRNGKey(3) if key is None else key
+    return {"params": {
+        "w": jax.random.normal(key, (512, 128)),
+        "emb": jax.random.normal(jax.random.fold_in(key, 1), (256, 64)),
+        "bias": jax.random.normal(jax.random.fold_in(key, 2), (64,)),
+    }}
+
+
+@pytest.mark.parametrize("codec,size_ratio,max_rel", [("int8", 3.0, 0.02),
+                                                      ("int4", 4.0, 0.12)])
+def test_quantized_checkpoint_file_codec(tmp_path, codec, size_ratio, max_rel):
+    """quantize='int8'/'int4' writes codes + per-block scales instead of f32
+    params: the files shrink accordingly, restore dequantizes through META
+    with bounded error, small leaves stay bit-exact, and a second
+    save→restore of the restored tree is idempotent (the dequantized values
+    are the codec's fixed point — resumed runs re-save losslessly)."""
+    tree = _param_tree()
+    full = CheckpointManager(str(tmp_path / "f32"), async_save=False)
+    full.save(1, tree, block=True)
+    q = CheckpointManager(str(tmp_path / codec), async_save=False,
+                          quantize=codec)
+    q.save(1, tree, block=True)
+    ratio = _npz_bytes(tmp_path / "f32") / _npz_bytes(tmp_path / codec)
+    assert ratio >= size_ratio, (codec, ratio)
+    meta = q.meta(1)
+    assert set(meta["quant"]) == {"params.w", "params.emb"}
+    for spec in meta["quant"].values():
+        assert {"codec", "block", "shape", "crc_q", "crc_scale"} <= set(spec)
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, tree)
+    restored = q.restore(1, zeros)
+    for k in ("w", "emb"):
+        a, b = np.asarray(tree["params"][k]), np.asarray(restored["params"][k])
+        rel = np.max(np.abs(a - b)) / np.max(np.abs(a))
+        assert rel < max_rel, (codec, k, rel)
+    np.testing.assert_array_equal(np.asarray(restored["params"]["bias"]),
+                                  np.asarray(tree["params"]["bias"]))
+    # idempotence: re-encoding the dequantized values is lossless
+    q2 = CheckpointManager(str(tmp_path / (codec + "_again")),
+                           async_save=False, quantize=codec)
+    q2.save(1, restored, block=True)
+    again = q2.restore(1, zeros)
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                   np.asarray(b)),
+        restored, again)
+
+
+@pytest.mark.parametrize("which", ["q", "scale"])
+def test_quantized_checkpoint_corruption_detected(tmp_path, which):
+    """Codes and scales carry SEPARATE crc32s in META: flipping bytes in
+    either entry fails the restore loudly instead of feeding garbage params
+    into a resumed run."""
+    ckpt = CheckpointManager(str(tmp_path), async_save=False, quantize="int4")
+    ckpt.save(1, _param_tree(), block=True)
+    npz = tmp_path / "step_00000001" / "host_0.npz"
+    data = dict(np.load(str(npz)))
+    key = f"params.w::{which}"
+    arr = data[key].copy()
+    arr.view(np.uint8)[:4] ^= 0xFF
+    data[key] = arr
+    np.savez(str(npz), **data)
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, _param_tree())
+    with pytest.raises(ValueError, match="crc32"):
+        ckpt.restore(1, zeros)
+
+
+def test_quantized_checkpoint_missing_codes_rejected(tmp_path):
+    """META promises quantized entries; a file lacking them must not restore
+    (a quantized checkpoint cannot be read as if it were f32)."""
+    ckpt = CheckpointManager(str(tmp_path), async_save=False, quantize="int4")
+    tree = _param_tree()
+    ckpt.save(1, tree, block=True)
+    npz = tmp_path / "step_00000001" / "host_0.npz"
+    data = dict(np.load(str(npz)))
+    del data["params.w::q"]
+    np.savez(str(npz), **data)
+    with pytest.raises(KeyError):
+        ckpt.restore(1, jax.tree_util.tree_map(jnp.zeros_like, tree))
+
+
+def test_quantized_save_with_pending_int4_projectors(tmp_path):
+    """A quantized save taken while an async refresh is in flight: the
+    pending buffer's packed-INT4 projector qstates and flags round-trip
+    BITWISE (uint8 codes are never file-quantized), the optimizer state is
+    lossless, and only the params group goes through the file codec."""
+    from repro.configs.base import GaLoreConfig
+    from repro.core.galore import galore, refresh_projectors_pending
+    from repro.optim.adam import scale_by_adam
+    from repro.quant import QuantPolicy, codec
+
+    key = jax.random.PRNGKey(11)
+    params = {"w": jax.random.normal(key, (128, 256))}
+    qp = QuantPolicy(projectors="int4", min_quant_size=1)
+    cfg = GaLoreConfig(rank=8, update_freq=4, quant=qp)
+    opt = galore(scale_by_adam(), cfg, external_refresh=True,
+                 b1=0.9, b2=0.999, eps=1e-8)
+    st = opt.init(params)
+    grads = {"w": jax.random.normal(jax.random.fold_in(key, 1), (128, 256))}
+    st = {**st, "step": jnp.asarray(1, jnp.int32)}
+    pending = refresh_projectors_pending(grads, st, cfg)
+    assert codec.is_axis4_qstate(pending["proj"]["w"])
+    tree = {"params": params, "opt_state": st, "pending": pending}
+    ckpt = CheckpointManager(str(tmp_path), async_save=False, quantize="int4")
+    ckpt.save(1, tree, block=True)
+    assert list(ckpt.meta(1)["quant"]) == ["params.w"]
+    restored = ckpt.restore(1, jax.tree_util.tree_map(jnp.zeros_like, tree))
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                   np.asarray(b)),
+        {"opt_state": tree["opt_state"], "pending": tree["pending"]},
+        {"opt_state": restored["opt_state"], "pending": restored["pending"]})
+    rel = float(jnp.max(jnp.abs(restored["params"]["w"] - params["w"]))
+                / jnp.max(jnp.abs(params["w"])))
+    assert 0 < rel < 0.12
+
+
 def test_async_save_failure_surfaces_on_wait(tmp_path, monkeypatch):
     """A daemon-thread write failure must not vanish: the next wait() (or
     the next save(), which waits first) re-raises it."""

@@ -148,10 +148,12 @@ def test_default_policy_keeps_layout_bit_identical():
 # ---------------------------------------------------------------------------
 
 
-def test_quantized_paths_track_fp32_oracle_50_steps():
+@pytest.mark.parametrize("stochastic", [False, True])
+def test_quantized_paths_track_fp32_oracle_50_steps(stochastic):
     key = jax.random.PRNGKey(7)
     params = _params(key)
-    qp = QuantPolicy(moments="int8", projectors="int4", min_quant_size=1000)
+    qp = QuantPolicy(moments="int8", projectors="int4", min_quant_size=1000,
+                     stochastic_round=stochastic)
     cfg_q = GaLoreConfig(rank=16, update_freq=5, scale=0.25, quant=qp)
     cfg_f = GaLoreConfig(rank=16, update_freq=5, scale=0.25)
     oracle = galore(scale_by_adam(), cfg_f)          # fp32 composable oracle
@@ -274,6 +276,72 @@ def test_fused_q8_kernel_right(shape):
     want = ref.galore_fused_adam8_step_right(P, G, mq, ms, vq, vs, count,
                                              alpha=0.25)
     _check(got, want, shape)
+
+
+@pytest.mark.parametrize("shape,right", [((72, 16, 130), False),
+                                         ((3, 72, 16, 130), False),
+                                         ((256, 16, 96), False),
+                                         ((130, 16, 72), True)])
+def test_fused_int4_packed_projector_matches_dequant_oracle(shape, right):
+    """The in-kernel INT4 dequant claim: feeding the packed nibble codes +
+    per-block absmax scales straight into the fused kernel (unpack→dequant
+    in VMEM) lands on the exact update of dequantizing P on the host and
+    launching with the f32 projector — no transient f32 P tree needed."""
+    P, G, W, M, V, mq, ms, vq, vs = _q8_inputs(jax.random.PRNGKey(33), shape,
+                                               right=right)
+    Pq = codec.quant4_axis_state(P)
+    Pdq = codec.dequant4_axis_state(Pq, P.shape)
+    fn = (ops.galore_fused_adam8_step_right if right
+          else ops.galore_fused_adam8_step)
+    kw = dict(alpha=0.25, use_pallas=True, interpret=True)
+    got = fn(Pq, G, mq, ms, vq, vs, jnp.int32(6), **kw)
+    want = fn(Pdq, G, mq, ms, vq, vs, jnp.int32(6), **kw)
+    for name, a, b in zip(["out", "mq", "ms", "vq", "vs"], got, want):
+        a, b = np.asarray(a), np.asarray(b)
+        if a.dtype == np.uint8:
+            np.testing.assert_array_equal(a, b, err_msg=str((shape, name)))
+        else:
+            np.testing.assert_allclose(a, b, rtol=0, atol=2e-5,
+                                       err_msg=str((shape, name)))
+
+
+@pytest.mark.parametrize("right", [False, True])
+def test_stochastic_requant_kernel_matches_oracle(right):
+    """Q-GaLore stochastic rounding: the kernel's counter-hash uniforms are
+    the oracle's exact uniforms, so the int8 codes must agree bitwise."""
+    shape = (130, 16, 72) if right else (72, 16, 130)
+    P, G, W, M, V, mq, ms, vq, vs = _q8_inputs(jax.random.PRNGKey(34), shape,
+                                               right=right)
+    count = jnp.int32(9)
+    if right:
+        got = ops.galore_fused_adam8_step_right(
+            P, G, mq, ms, vq, vs, count, alpha=0.25, stochastic=True,
+            use_pallas=True, interpret=True)
+        want = ref.galore_fused_adam8_step_right(
+            P, G, mq, ms, vq, vs, count, 0.9, 0.999, 1e-8, 0.25,
+            stochastic=True)
+    else:
+        got = ops.galore_fused_adam8_step(
+            P, G, mq, ms, vq, vs, count, alpha=0.25, stochastic=True,
+            use_pallas=True, interpret=True)
+        want = ref.galore_fused_adam8_step(
+            P, G, mq, ms, vq, vs, count, 0.9, 0.999, 1e-8, 0.25,
+            stochastic=True)
+    for name, a, b in zip(["out", "mq", "ms", "vq", "vs"], got, want):
+        a, b = np.asarray(a), np.asarray(b)
+        if a.dtype == np.uint8:
+            np.testing.assert_array_equal(a, b, err_msg=name)
+        else:
+            np.testing.assert_allclose(
+                a, b, rtol=2e-2, atol=2e-2 * max(np.abs(b).max(), 1e-6),
+                err_msg=name)
+    # the deterministic path draws no uniforms: same inputs, different codes
+    det = ops.galore_fused_adam8_step_right(
+        P, G, mq, ms, vq, vs, count, alpha=0.25, use_pallas=True,
+        interpret=True) if right else ops.galore_fused_adam8_step(
+        P, G, mq, ms, vq, vs, count, alpha=0.25, use_pallas=True,
+        interpret=True)
+    assert not np.array_equal(np.asarray(det[1]), np.asarray(got[1]))
 
 
 @pytest.mark.parametrize("quant", [False, True])
