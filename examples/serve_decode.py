@@ -1,7 +1,9 @@
-"""Batched serving example: prefill + slot-based greedy decode.
+"""Serving example: continuous batching over the paged KV cache.
 
-The decode step here is the same function the dry-run lowers for the
-decode_32k / long_500k cells (context-sharded KV cache at scale).
+Each request carries its own max_new / max_len / sampling params; the
+engine interleaves chunked prefill with batched decode, so the three
+requests below stream tokens concurrently even though their prompts and
+decode budgets all differ (no batch-wide padding or max_new convoy).
 
     PYTHONPATH=src python examples/serve_decode.py --arch qwen2_7b --max-new 12
 """
@@ -12,8 +14,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import get_config
-from repro.launch.serve import Server
 from repro.models import model as M
+from repro.serve import Engine, Request, ServeConfig
 
 
 def main():
@@ -25,7 +27,9 @@ def main():
 
     cfg = get_config(args.arch, smoke=True)
     params = M.init_params(cfg, jax.random.PRNGKey(0))
-    srv = Server(cfg, params, max_len=96, slots=args.slots)
+    engine = Engine(cfg, params, ServeConfig(
+        block_size=8, num_blocks=64, slots=args.slots,
+        max_len_cap=96, prefill_chunk=16))
 
     prompts = [
         jnp.arange(7) % cfg.vocab_size,
@@ -33,13 +37,26 @@ def main():
         (jnp.arange(9) * 5 + 1) % cfg.vocab_size,
     ]
     t0 = time.time()
-    outs = srv.generate(prompts, max_new=args.max_new)
+    ids = [
+        engine.submit(Request(tokens=tuple(int(t) for t in prompts[0]),
+                              max_new=args.max_new)),
+        # per-request budgets: a short greedy one and a sampled one
+        engine.submit(Request(tokens=tuple(int(t) for t in prompts[1]),
+                              max_new=max(1, args.max_new // 2))),
+        engine.submit(Request(tokens=tuple(int(t) for t in prompts[2]),
+                              max_new=args.max_new, temperature=0.8,
+                              top_k=50, seed=7)),
+    ]
+    completions = engine.run_until_drained()
     dt = time.time() - t0
-    n_tok = sum(len(o) for o in outs)
-    print(f"[serve] {len(prompts)} requests, {n_tok} tokens in {dt:.2f}s "
+    n_tok = sum(len(c.tokens) for c in completions)
+    print(f"[serve] {len(ids)} requests, {n_tok} tokens in {dt:.2f}s "
           f"({n_tok/dt:.1f} tok/s on CPU)")
-    for i, o in enumerate(outs):
-        print(f"  request {i}: {o}")
+    for rid in ids:
+        c = engine.result(rid)
+        print(f"  request {c.request_id} [{c.finish_reason}, "
+              f"ttft {c.ttft_s*1e3:.0f}ms, {c.latency_s*1e3:.0f}ms total]: "
+              f"{list(c.tokens)}")
 
 
 if __name__ == "__main__":

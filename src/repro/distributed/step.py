@@ -606,6 +606,80 @@ def make_decode_step(cfg: ModelConfig, rules: Optional[ShardingRules] = None):
     return decode_step
 
 
+def _paged_layer_cache(cfg, kv, bt, pos):
+    """Broadcast the per-call block tables/positions onto the stacked pool so
+    the layer scan can slice a homogeneous per-layer cache dict."""
+    L = cfg.n_layers
+    return {
+        "kp": kv["kp"], "vp": kv["vp"],
+        "bt": jnp.broadcast_to(bt[None], (L,) + bt.shape),
+        "pos": jnp.broadcast_to(pos[None], (L,) + pos.shape),
+    }
+
+
+def _explicit_positions(cfg, pos_2d):
+    """Per-row rope positions (B, S) -> batch["positions"] for forward()."""
+    if cfg.rope_style == "mrope":
+        return jnp.broadcast_to(pos_2d[None], (3,) + pos_2d.shape)
+    return pos_2d
+
+
+def make_paged_prefill_step(cfg: ModelConfig, rules: Optional[ShardingRules] = None):
+    """paged_prefill(params, kv, bt, pos0, tokens) -> (logits, kv').
+
+    One prefill CHUNK per lane: tokens (B, C) holds a fixed-width slice of
+    each lane's prompt starting at its own offset pos0 — scalar (all lanes at
+    the same offset) or (B,) vector, so the engine prefills EVERY pending
+    slot in one batched call (lanes pad their final chunk; C is static and
+    the jit never retraces). bt (B, nb) are per-lane block tables; K/V
+    scatter into pool blocks, logits (B, C, V) come back for every chunk
+    position — the engine samples each lane's row of its last REAL token.
+    Unlike make_prefill_step the cache rows here carry true per-request
+    positions, so rope phases are exact for any chunk offset.
+    """
+
+    def prefill_step(params, kv, bt, pos0, tokens):
+        with sharding_context(rules):
+            B, C = tokens.shape
+            pos0 = jnp.broadcast_to(
+                jnp.atleast_1d(jnp.asarray(pos0, jnp.int32)), (B,))
+            pos_rows = pos0[:, None] + jnp.arange(C, dtype=jnp.int32)[None]
+            batch = {
+                "tokens": tokens,
+                "positions": _explicit_positions(cfg, pos_rows),
+            }
+            cache = _paged_layer_cache(cfg, kv, bt, pos0)
+            logits, _, new_cache = M.forward(cfg, params, batch, cache=cache)
+        return logits, {"kp": new_cache["kp"], "vp": new_cache["vp"]}
+
+    return prefill_step
+
+
+def make_paged_decode_step(cfg: ModelConfig, rules: Optional[ShardingRules] = None):
+    """paged_decode(params, kv, bt, pos, tokens) -> (last_logits, kv').
+
+    One token for every decode lane at once: tokens (B, 1), bt (B, nb), pos
+    (B,) — per-row write index AND rope position, so lanes at unrelated
+    sequence lengths batch into one call (the continuous-batching core).
+    Inactive lanes pass bt rows of zeros + pos 0: their K/V land in scratch
+    block 0 and their logits are discarded host-side. Returns raw logits
+    (B, V) instead of argmax so the engine applies per-request sampling
+    (temperature/top_k/seed) without retracing.
+    """
+
+    def decode_step(params, kv, bt, pos, tokens):
+        with sharding_context(rules):
+            batch = {
+                "tokens": tokens,
+                "positions": _explicit_positions(cfg, pos[:, None]),
+            }
+            cache = _paged_layer_cache(cfg, kv, bt, pos)
+            logits, _, new_cache = M.forward(cfg, params, batch, cache=cache)
+        return logits[:, -1], {"kp": new_cache["kp"], "vp": new_cache["vp"]}
+
+    return decode_step
+
+
 # ---------------------------------------------------------------------------
 # Input specs (ShapeDtypeStruct stand-ins — never allocate)
 # ---------------------------------------------------------------------------

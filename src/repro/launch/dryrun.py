@@ -40,7 +40,7 @@ from repro.distributed.step import (
     make_refresh_step,
     make_train_step,
 )
-from repro.launch import hlo_analysis
+from repro.launch import cli, hlo_analysis
 from repro.launch.mesh import make_production_mesh, rules_variant
 from repro.launch.model_flops import model_flops, param_counts
 
@@ -271,16 +271,11 @@ def main():
     ap.add_argument("--rules", default="baseline")
     ap.add_argument("--optimizer", default="adamw")
     ap.add_argument("--no-galore", action="store_true")
-    ap.add_argument("--rank-frac", type=float, default=0.0,
-                    help="proportional per-leaf GaLore rank (core/subspace.py)")
-    ap.add_argument("--adaptive-t", action="store_true",
-                    help="adaptive per-leaf refresh period (adds schedule state)")
-    ap.add_argument("--stagger", action="store_true",
-                    help="staggered per-leaf projector refresh offsets")
-    ap.add_argument("--quant-moments", choices=["fp32", "int8"], default="fp32",
-                    help="Adam moment storage (8-bit GaLore state layout)")
-    ap.add_argument("--quant-proj", choices=["fp32", "bf16", "int4"],
-                    default="fp32", help="persistent projector storage")
+    # shared groups (launch/cli.py): canonical --galore-* / --quant-* flags;
+    # this CLI's historical bare spellings (--rank-frac, --adaptive-t,
+    # --stagger) remain usable as aliases of the same dests
+    cli.add_galore_subspace_flags(ap)
+    cli.add_quant_flags(ap)
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--skip-scaling", action="store_true")
     args = ap.parse_args()
@@ -308,8 +303,9 @@ def main():
                         arch, shape, multi_pod=multi, rules_name=args.rules,
                         optimizer=args.optimizer, galore=not args.no_galore,
                         skip_scaling=args.skip_scaling or multi,
-                        rank_frac=args.rank_frac, adaptive_t=args.adaptive_t,
-                        stagger=args.stagger,
+                        rank_frac=args.galore_rank_frac,
+                        adaptive_t=args.galore_adaptive_t,
+                        stagger=args.galore_stagger,
                         quant_moments=args.quant_moments,
                         quant_proj=args.quant_proj,
                     )

@@ -1,9 +1,19 @@
-"""Serving driver: prefill + batched slot-based decode with a KV cache.
+"""Serving CLI + the deprecated `Server.generate` compatibility shim.
 
-Minimal continuous-batching shape: a fixed number of slots share one cache;
-finished sequences free their slot for the next queued request. Greedy
-decode; the decode step is the same function the dry-run lowers for
-``decode_32k`` / ``long_500k``.
+The engine itself lives in ``repro.serve`` (continuous batching, paged KV
+cache, typed Request/Completion API). This module keeps:
+
+  * `main()` — the CLI driver: builds an Engine, submits a demo request
+    stream (or serves a trained/quantized checkpoint via ``--ckpt-dir``),
+    drains, prints per-request completions.
+  * `Server` — the PRE-ENGINE class kept as a thin compatibility shim:
+    `generate(prompts)` submits one Request per prompt and drains the
+    engine. Emits DeprecationWarning; new code should use
+    ``repro.serve.Engine`` directly (per-request max_new/max_len/sampling,
+    non-blocking submit/poll). Non-attention families (ssm/hybrid/audio)
+    fall back to the legacy contiguous-cache loop, which now allocates its
+    cache once per generate() call only (the old constructor kept a dead
+    `slots × max_len` cache resident for the server's lifetime).
 
 CLI:  PYTHONPATH=src python -m repro.launch.serve --arch qwen2_7b --max-new 16
 
@@ -16,29 +26,65 @@ from __future__ import annotations
 
 import argparse
 import time
+import warnings
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import get_config
 from repro.distributed.step import make_decode_step, make_prefill_step
-from repro.launch import mesh as mesh_lib
+from repro.launch import cli
 from repro.models import model as M
+from repro.serve import Engine, Request, ServeConfig
 
 
 class Server:
+    """Deprecated slot-batch facade over the paged-cache Engine.
+
+    Kept so existing callers (`Server(cfg, params).generate(prompts)`) run
+    unchanged; greedy outputs are token-identical to the old slot-based
+    decoder for per-prompt exact lengths. Prefer `repro.serve.Engine`.
+    """
+
     def __init__(self, cfg, params, max_len: int = 512, slots: int = 4, rules=None):
+        warnings.warn(
+            "repro.launch.serve.Server is deprecated; use repro.serve.Engine "
+            "(submit()/poll()/run_until_drained() with typed Request/"
+            "Completion and per-request max_new/max_len/sampling)",
+            DeprecationWarning, stacklevel=2)
         self.cfg, self.params, self.max_len = cfg, params, max_len
         self.slots = slots
         self.rules = rules
-        self.cache = M.init_cache(cfg, slots, max_len)
-        self.prefill = jax.jit(make_prefill_step(cfg, rules))
-        self.decode = jax.jit(make_decode_step(cfg, rules), donate_argnums=(1,))
-        self.lengths = [0] * slots
+        self.engine = None
+        if cfg.family in M.PAGED_FAMILIES:
+            bs = min(16, max_len)
+            scfg = ServeConfig(
+                block_size=bs,
+                # pool sized to the old server-wide allocation (slots full
+                # sequences) + scratch, so the shim can never be tighter
+                # than the class it replaces
+                num_blocks=1 + slots * (-(-max_len // bs)),
+                slots=slots, max_len_cap=max_len,
+                prefill_chunk=min(32, max_len))
+            self.engine = Engine(cfg, params, scfg, rules=rules)
+        else:
+            # legacy contiguous path: recurrent/cross-attn families have no
+            # paged cache; the per-call cache is built inside generate()
+            self.prefill = jax.jit(make_prefill_step(cfg, rules))
+            self.decode = jax.jit(make_decode_step(cfg, rules), donate_argnums=(1,))
 
     def generate(self, prompts: list, max_new: int = 16):
         """prompts: list of 1-D int arrays (<= slots). Greedy decode."""
         assert len(prompts) <= self.slots
+        if self.engine is not None:
+            ids = [self.engine.submit(
+                Request(tokens=tuple(int(t) for t in p), max_new=max_new))
+                for p in prompts]
+            self.engine.run_until_drained()
+            return [list(self.engine.result(i).tokens) for i in ids]
+        return self._generate_contiguous(prompts, max_new)
+
+    def _generate_contiguous(self, prompts: list, max_new: int):
         B = self.slots
         plen = max(len(p) for p in prompts)
         toks = jnp.zeros((B, plen), jnp.int32)
@@ -49,9 +95,8 @@ class Server:
             batch["enc_frames"] = jnp.zeros(
                 (B, self.cfg.enc_seq, self.cfg.d_model), jnp.float32
             )
-        # prefill pads the cache region [0, plen)
-        padded_cache = M.init_cache(self.cfg, B, self.max_len)
-        last_logits, cache = self.prefill(self.params, padded_cache, batch)
+        cache = M.init_cache(self.cfg, B, self.max_len)
+        last_logits, cache = self.prefill(self.params, cache, batch)
         next_tok = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
         outs = [[] for _ in range(B)]
         pos = plen
@@ -83,12 +128,16 @@ def load_checkpoint_params(cfg, ckpt_dir: str):
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen2_7b")
+    cli.add_arch_flags(ap, default_arch="qwen2_7b")
+    cli.add_ckpt_flags(ap, default_dir=None, save_flags=False)
     ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--full", action="store_true")
-    ap.add_argument("--ckpt-dir", default=None,
-                    help="CheckpointManager root to serve trained weights from "
-                         "(quantized checkpoints load directly)")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--num-blocks", type=int, default=64)
+    ap.add_argument("--max-len-cap", type=int, default=128,
+                    help="per-request prompt+generation ceiling (block-table "
+                         "width); requests may set a smaller max_len")
+    ap.add_argument("--prefill-chunk", type=int, default=32)
     args = ap.parse_args()
     cfg = get_config(args.arch, smoke=not args.full)
     key = jax.random.PRNGKey(0)
@@ -97,14 +146,31 @@ def main():
         print(f"[serve] restored params from {args.ckpt_dir} step {step}")
     else:
         params = M.init_params(cfg, key)
-    srv = Server(cfg, params, max_len=128, slots=4)
+
+    scfg = ServeConfig(block_size=args.block_size, num_blocks=args.num_blocks,
+                       slots=args.slots, max_len_cap=args.max_len_cap,
+                       prefill_chunk=args.prefill_chunk)
+    engine = Engine(cfg, params, scfg)
+    print(f"[serve] engine up: {args.slots} slots, "
+          f"{args.num_blocks}×{args.block_size}-token blocks "
+          f"({engine.pool_hbm_bytes / 1e6:.1f} MB KV pool)")
+    reqs = [
+        Request(tokens=tuple(int(t) for t in jnp.arange(5) % cfg.vocab_size),
+                max_new=args.max_new),
+        Request(tokens=tuple(int(t) for t in jnp.arange(3) % cfg.vocab_size),
+                max_new=args.max_new),
+    ]
     t0 = time.time()
-    outs = srv.generate([jnp.arange(5) % cfg.vocab_size, jnp.arange(3) % cfg.vocab_size],
-                        max_new=args.max_new)
+    ids = [engine.submit(r) for r in reqs]
+    completions = engine.run_until_drained()
     dt = time.time() - t0
-    print(f"[serve] generated {sum(len(o) for o in outs)} tokens in {dt:.2f}s")
-    for i, o in enumerate(outs):
-        print(f"  slot {i}: {o}")
+    total = sum(len(c.tokens) for c in completions)
+    print(f"[serve] generated {total} tokens in {dt:.2f}s "
+          f"({total / max(dt, 1e-9):.1f} tok/s)")
+    for rid in ids:
+        c = engine.result(rid)
+        print(f"  req {c.request_id} [{c.finish_reason}, "
+              f"ttft {c.ttft_s * 1e3:.0f}ms]: {list(c.tokens)}")
 
 
 if __name__ == "__main__":

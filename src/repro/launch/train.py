@@ -531,22 +531,17 @@ def train_loop(run: RunConfig, tc: TrainConfig, cfg=None, on_step=None,
 
 
 def main():
+    from repro.launch import cli
+
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="llama_60m")
+    cli.add_arch_flags(ap, default_arch="llama_60m")
     ap.add_argument("--steps", type=int, default=200)
-    ap.add_argument("--full", action="store_true", help="full-size config (default smoke)")
     ap.add_argument("--optimizer", default="adamw")
     ap.add_argument("--galore-rank", type=int, default=0)
     ap.add_argument("--galore-t", type=int, default=200)
     ap.add_argument("--galore-fused", action="store_true",
                     help="fused project→Adam→back kernel per leaf (adam/adamw)")
-    ap.add_argument("--galore-rank-frac", type=float, default=0.0,
-                    help="proportional per-leaf rank: max(1, frac·min(m,n)); "
-                         "overrides --galore-rank per leaf")
-    ap.add_argument("--galore-adaptive-t", action="store_true",
-                    help="overlap-gated per-leaf refresh period (Q-GaLore-style)")
-    ap.add_argument("--galore-stagger", action="store_true",
-                    help="stagger per-leaf projector refreshes across the window")
+    cli.add_galore_subspace_flags(ap)
     ap.add_argument("--galore-stagger-importance", action="store_true",
                     help="order stagger offsets by measured gradient norm "
                          "(AdaRankGrad-style; implies --galore-stagger)")
@@ -582,20 +577,7 @@ def main():
     ap.add_argument("--galore-fused-apply", action="store_true",
                     help="fold the weight update into the fused-kernel "
                          "epilogue (requires --galore-fused)")
-    ap.add_argument("--quant-moments", choices=["fp32", "int8"], default="fp32",
-                    help="Adam moment storage (int8 = blockwise dynamic codes "
-                         "+ per-block absmax; the paper's 8-bit GaLore)")
-    ap.add_argument("--quant-proj", choices=["fp32", "bf16", "int4"],
-                    default="fp32",
-                    help="persistent projector storage (int4 = packed "
-                         "Q-GaLore format, dequantized on read)")
-    ap.add_argument("--quant-lazy-refresh", action="store_true",
-                    help="int4 projectors: skip committing refreshes that "
-                         "leave the quantized codes unchanged")
-    ap.add_argument("--quant-stochastic", action="store_true",
-                    help="int8 moments: stochastic rounding on the requant "
-                         "(Q-GaLore; counter-hash RNG seeded by the step "
-                         "count, bitwise-shared between kernel and oracle)")
+    cli.add_quant_flags(ap)
     ap.add_argument("--anomaly-guard", action="store_true",
                     help="per-step anomaly guard: non-finite loss/grad-norm "
                          "or an EMA z-score loss spike turns the step into a "
@@ -620,17 +602,9 @@ def main():
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=256)
-    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
-    ap.add_argument("--ckpt-every", type=int, default=50)
-    ap.add_argument("--ckpt-quantize", choices=["int8", "int4"], default=None,
-                    help="write quantized checkpoint files: large float "
-                         "params leaves become blockwise codes + scales "
-                         "(~4× / ~7× smaller); optimizer state stays "
-                         "verbatim and restore is META-driven")
+    cli.add_ckpt_flags(ap, default_dir="/tmp/repro_ckpt")
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args()
-
-    from repro.quant import QuantPolicy
 
     galore = (
         GaLoreConfig(rank=args.galore_rank, update_freq=args.galore_t,
@@ -640,10 +614,7 @@ def main():
                                       or args.galore_stagger_importance),
                      stagger_by_importance=args.galore_stagger_importance,
                      reproject_moments=args.galore_reproject_moments,
-                     quant=QuantPolicy(moments=args.quant_moments,
-                                       projectors=args.quant_proj,
-                                       lazy_refresh=args.quant_lazy_refresh,
-                                       stochastic_round=args.quant_stochastic))
+                     quant=cli.quant_policy_from(args))
         if args.galore_rank > 0 or args.galore_rank_frac > 0
         else None
     )

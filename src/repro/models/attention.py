@@ -81,6 +81,49 @@ def _masked_softmax(scores, mask):
     return checkpoint_name(unnorm / denom, "attn_probs")
 
 
+def _paged_attend(q, k, v, cache, chunk: int):
+    """Block-table attention over a pooled paged KV cache (serving engine).
+
+    cache: {"kp"/"vp": (NB, bs, KV, hd) pooled blocks,
+            "bt": (B, nb) int32 per-row block tables (unused tail -> block 0),
+            "pos": (B,) int32 next-write token index per row}.
+
+    Write: this call's S tokens scatter to flat pool slots via the block
+    table; positions past a row's table (padded prefill tail, inactive decode
+    lanes) land in the reserved scratch block 0. Read: each row gathers its
+    nb blocks back into position order -> T = nb*bs keys, masked causally
+    against the row's own positions. Masked (garbage/scratch) keys contribute
+    EXACT zeros post-softmax (exp(NEG_INF - m) == 0, 0 * finite == 0), so
+    logits match the contiguous cache bitwise — the engine's greedy decode is
+    token-identical to the slot-based oracle (tests/test_serve.py pins this).
+    """
+    B, S = k.shape[0], k.shape[1]
+    NB, bs, KV, hd = cache["kp"].shape
+    bt, pos = cache["bt"], cache["pos"]
+    nb = bt.shape[1]
+
+    tgt = pos[:, None] + jnp.arange(S, dtype=jnp.int32)  # (B, S) token index
+    blk = jnp.take_along_axis(bt, jnp.minimum(tgt // bs, nb - 1), axis=1)
+    flat = (blk * bs + tgt % bs).reshape(-1)  # (B*S,) into the NB*bs pool
+    kp = cache["kp"].reshape(NB * bs, KV, hd).at[flat].set(
+        k.reshape(B * S, KV, hd)).reshape(NB, bs, KV, hd)
+    vp = cache["vp"].reshape(NB * bs, KV, hd).at[flat].set(
+        v.reshape(B * S, KV, hd)).reshape(NB, bs, KV, hd)
+    new_cache = {"kp": kp, "vp": vp, "bt": bt, "pos": pos}
+
+    k_att = kp[bt.reshape(-1)].reshape(B, nb * bs, KV, hd)
+    v_att = vp[bt.reshape(-1)].reshape(B, nb * bs, KV, hd)
+    qi = tgt[:, :, None]  # (B, S, 1)
+    kj = jnp.arange(nb * bs)[None, None, :]
+    mask = kj <= qi
+    if chunk > 0:
+        mask &= (qi // chunk) == (kj // chunk)
+    scores = _gqa_scores(q, k_att)
+    probs = _masked_softmax(scores, mask[:, None, None])  # (B,1,1,S,T)
+    out = _gqa_out(probs, v_att)
+    return out, new_cache
+
+
 def _train_mask(seq_q: int, seq_k: int, causal: bool, chunk: int, q_offset: int = 0):
     qi = jnp.arange(seq_q)[:, None] + q_offset
     kj = jnp.arange(seq_k)[None, :]
@@ -135,7 +178,11 @@ def attend(
     q = q.reshape(B, S, KV, G, hd) * (hd ** -0.5)
 
     new_cache = cache
-    if cache is not None and kv_override is None:
+    if cache is not None and kv_override is None and "kp" in cache:
+        # paged/block cache (serving engine): positions come from the cache's
+        # own per-row "pos", never from the scalar cache_pos
+        out, new_cache = _paged_attend(q, k, v, cache, chunk)
+    elif cache is not None and kv_override is None:
         if S == 1:
             # decode: write this token's K/V into the cache
             k_cache = jax.lax.dynamic_update_slice(cache["k"], k, (0, cache_pos, 0, 0))
@@ -189,3 +236,15 @@ def init_cache(cfg, batch: int, max_len: int, dtype):
 def cache_axes():
     spec = ("batch", "kv_seq", "kv_heads", None)
     return {"k": spec, "v": spec}
+
+
+def init_paged_cache(cfg, num_blocks: int, block_size: int, dtype):
+    """Per-layer pooled block store for the serving engine (block 0 = scratch)."""
+    hd = cfg.resolved_head_dim
+    shape = (num_blocks, block_size, cfg.n_kv_heads, hd)
+    return {"kp": jnp.zeros(shape, dtype), "vp": jnp.zeros(shape, dtype)}
+
+
+def paged_cache_axes():
+    spec = (None, None, "kv_heads", None)
+    return {"kp": spec, "vp": spec}

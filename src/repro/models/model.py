@@ -121,6 +121,31 @@ def init_cache(cfg, batch: int, max_len: int):
     return stacked
 
 
+PAGED_FAMILIES = ("dense", "moe", "vlm")  # pure-attention caches page cleanly
+
+
+def init_paged_cache(cfg, num_blocks: int, block_size: int):
+    """Stacked per-layer pooled KV blocks {"kp","vp": (L, NB, bs, KV, hd)}.
+
+    One pool shared by every live request of the serving engine; per-request
+    block tables + positions are supplied per call by the paged step fns
+    (distributed/step.py), not stored here. SSM/hybrid recurrent state and
+    the audio cross-cache have no block structure to page."""
+    if cfg.family not in PAGED_FAMILIES:
+        raise NotImplementedError(
+            f"paged KV cache supports families {PAGED_FAMILIES}, not "
+            f"{cfg.family!r} (recurrent/cross-attn state is not paged)")
+    dtype = canonical_dtype(cfg.dtype)
+    one = attn_lib.init_paged_cache(cfg, num_blocks, block_size, dtype)
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.n_layers,) + x.shape), one
+    )
+
+
+def paged_cache_axes(cfg):
+    return stacks._stack_axes(attn_lib.paged_cache_axes())
+
+
 def cache_axes(cfg):
     if cfg.family == "hybrid":
         return stacks.jamba_cache_axes(cfg)

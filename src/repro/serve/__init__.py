@@ -1,0 +1,17 @@
+"""Serving engine: continuous batching + paged KV cache.
+
+Public surface:
+  ServeConfig / Request / Completion  (serve.api)   — typed request/response
+  Engine: submit() / poll() / run_until_drained()   (serve.engine)
+  BlockAllocator / OutOfBlocks                      (serve.kv_cache)
+
+The legacy ``repro.launch.serve.Server`` wraps Engine as a deprecated shim.
+"""
+from repro.serve.api import Completion, Request, ServeConfig, make_request
+from repro.serve.engine import Engine, generate_batch
+from repro.serve.kv_cache import BlockAllocator, OutOfBlocks
+
+__all__ = [
+    "BlockAllocator", "Completion", "Engine", "OutOfBlocks", "Request",
+    "ServeConfig", "generate_batch", "make_request",
+]

@@ -1,0 +1,342 @@
+"""Serving engine: paged KV cache invariants, parity vs the contiguous
+oracle, continuous-batching scheduler behaviour, and the API surface."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.distributed.step import (
+    make_decode_step,
+    make_paged_decode_step,
+    make_paged_prefill_step,
+    make_prefill_step,
+)
+from repro.models import model as M
+from repro.serve import (
+    BlockAllocator,
+    Completion,
+    Engine,
+    OutOfBlocks,
+    Request,
+    ServeConfig,
+)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # optional dep (see test_properties.py)
+    HAVE_HYPOTHESIS = False
+
+
+@pytest.fixture(scope="module")
+def dense_model():
+    cfg = get_config("llama_60m", smoke=True)
+    return cfg, M.init_params(cfg, jax.random.PRNGKey(1))
+
+
+@pytest.fixture(scope="module")
+def gqa_model():
+    cfg = get_config("qwen2_7b", smoke=True)  # GQA kv=2 + qkv bias
+    return cfg, M.init_params(cfg, jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# BlockAllocator invariants
+# ---------------------------------------------------------------------------
+
+
+def test_allocator_alloc_free_reuse():
+    a = BlockAllocator(num_blocks=9, block_size=4, blocks_per_table=8)
+    assert a.num_free == 8  # block 0 reserved
+    a.ensure(1, 10)  # 10 tokens -> 3 blocks
+    a.advance(1, 10)
+    assert len(a.owned(1)) == 3 and a.length(1) == 10
+    a.ensure(1, 2)  # 12 tokens still fit 3 blocks
+    assert len(a.owned(1)) == 3
+    a.ensure(1, 3)  # 13 tokens -> 4th block
+    assert len(a.owned(1)) == 4 and a.num_free == 4
+    first_owned = set(a.owned(1))
+    assert 0 not in first_owned
+    a.check_invariants()
+
+    freed = a.release(1)
+    assert freed == 4 and a.num_free == 8 and a.owned(1) == []
+    a.ensure(2, 1)  # LIFO: released blocks are immediately reusable
+    assert set(a.owned(2)) <= first_owned
+    a.check_invariants()
+
+
+def test_allocator_out_of_blocks_is_all_or_nothing():
+    a = BlockAllocator(num_blocks=5, block_size=2, blocks_per_table=8)
+    a.ensure(1, 5)  # 3 of 4 blocks
+    a.advance(1, 5)
+    free_before = a.num_free
+    with pytest.raises(OutOfBlocks):
+        a.ensure(2, 6)  # needs 3, only 1 free
+    assert a.num_free == free_before and a.owned(2) == []  # nothing leaked
+    with pytest.raises(OutOfBlocks):
+        a.ensure(3, 100)  # wider than blocks_per_table
+    a.check_invariants()
+
+
+def test_allocator_table_row_scratch_tail():
+    a = BlockAllocator(num_blocks=16, block_size=4, blocks_per_table=6)
+    a.ensure(7, 9)
+    row = a.table_row(7)
+    assert row.shape == (6,) and row.dtype == np.int32
+    assert (row[:3] > 0).all() and (row[3:] == 0).all()  # tail -> scratch
+    assert a.table_row(999).tolist() == [0] * 6  # unknown request: all scratch
+
+
+def _fragmentation_ops(alloc, ops):
+    """Interleaved grow/release schedule; invariants must hold throughout."""
+    live = set()
+    for rid, grow in ops:
+        if grow > 0:
+            try:
+                alloc.ensure(rid, grow)
+                alloc.advance(rid, grow)
+                live.add(rid)
+            except OutOfBlocks:
+                pass  # pool pressure is part of the schedule
+        elif rid in live:
+            alloc.release(rid)
+            live.discard(rid)
+        alloc.check_invariants()
+    for rid in live:
+        alloc.release(rid)
+    alloc.check_invariants()
+    assert alloc.num_free == alloc.num_blocks - 1  # nothing lost to fragmentation
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.lists(st.tuples(st.integers(0, 5), st.integers(-1, 9)),
+                    min_size=1, max_size=60))
+    def test_block_table_fragmentation_property(ops):
+        _fragmentation_ops(BlockAllocator(12, 3, 7), ops)
+
+else:
+
+    @pytest.mark.parametrize("seed", range(20))
+    def test_block_table_fragmentation_property(seed):
+        rng = np.random.default_rng(seed)
+        ops = [(int(rng.integers(0, 6)), int(rng.integers(-1, 10)))
+               for _ in range(60)]
+        _fragmentation_ops(BlockAllocator(12, 3, 7), ops)
+
+
+# ---------------------------------------------------------------------------
+# Paged steps: bitwise parity vs the contiguous-cache oracle
+# ---------------------------------------------------------------------------
+
+
+def test_paged_steps_bitwise_match_contiguous_oracle(gqa_model):
+    """Chunked paged prefill + decode produce logits BITWISE equal to the
+    contiguous cache: masked pool positions contribute exact zeros."""
+    cfg, params = gqa_model
+    prompt = [int(t) for t in np.arange(7) % cfg.vocab_size]
+    max_new = 4
+
+    prefill = jax.jit(make_prefill_step(cfg))
+    decode = jax.jit(make_decode_step(cfg))
+    cache = M.init_cache(cfg, 1, 32)
+    last, cache = prefill(params, cache,
+                          {"tokens": jnp.asarray([prompt], jnp.int32)})
+    oracle_logits = [np.asarray(last[0])]
+    tok = int(jnp.argmax(last[0]))
+    oracle_toks = [tok]
+    pos = len(prompt)
+    for _ in range(max_new - 1):
+        nt, cache = decode(params, cache,
+                           jnp.asarray([[tok]], jnp.int32), jnp.int32(pos))
+        # re-derive logits parity through a fresh paged decode below; the
+        # oracle step returns argmax only
+        tok = int(nt[0])
+        oracle_toks.append(tok)
+        pos += 1
+
+    # paged: 3-token chunks over 4 blocks of 4
+    p_prefill = jax.jit(make_paged_prefill_step(cfg))
+    p_decode = jax.jit(make_paged_decode_step(cfg))
+    scfg = ServeConfig(block_size=4, num_blocks=16, slots=2,
+                       max_len_cap=32, prefill_chunk=3)
+    alloc = BlockAllocator(scfg.num_blocks, scfg.block_size, scfg.blocks_per_table)
+    kv = M.init_paged_cache(cfg, scfg.num_blocks, scfg.block_size)
+    done = 0
+    while done < len(prompt):
+        c = min(3, len(prompt) - done)
+        alloc.ensure(1, c)
+        chunk = np.zeros((1, 3), np.int32)
+        chunk[0, :c] = prompt[done: done + c]
+        logits, kv = p_prefill(params, kv, jnp.asarray(alloc.table_row(1)[None]),
+                               jnp.int32(done), jnp.asarray(chunk))
+        alloc.advance(1, c)
+        done += c
+    paged_last = np.asarray(logits[0, c - 1])
+    assert np.array_equal(paged_last, oracle_logits[0])
+    tok = int(np.argmax(paged_last))
+    paged_toks = [tok]
+    B = scfg.slots
+    for _ in range(max_new - 1):
+        alloc.ensure(1, 1)
+        bt = np.zeros((B, scfg.blocks_per_table), np.int32)
+        pos_v = np.zeros((B,), np.int32)
+        toks = np.zeros((B, 1), np.int32)
+        bt[0] = alloc.table_row(1)
+        pos_v[0] = alloc.length(1)
+        toks[0, 0] = tok
+        logits, kv = p_decode(params, kv, jnp.asarray(bt), jnp.asarray(pos_v),
+                              jnp.asarray(toks))
+        alloc.advance(1, 1)
+        tok = int(np.argmax(np.asarray(logits[0])))
+        paged_toks.append(tok)
+    assert paged_toks == oracle_toks
+
+
+def test_engine_greedy_token_identical_to_full_forward(dense_model):
+    """Acceptance bar: the engine's greedy decode over the paged cache
+    matches a full-forward greedy rollout on a fixed prompt set, for chunked
+    AND single-chunk prefill."""
+    cfg, params = dense_model
+    prompt_set = [(3, 1, 4, 1, 5), (2, 7, 1), tuple(int(t) for t in
+                                                    np.arange(9) % cfg.vocab_size)]
+    max_new = 4
+
+    def oracle(prompt):
+        toks = list(prompt)
+        for _ in range(max_new):
+            logits, _, _ = M.forward(cfg, params,
+                                     {"tokens": jnp.asarray([toks], jnp.int32)})
+            toks.append(int(jnp.argmax(logits[0, -1])))
+        return toks[len(prompt):]
+
+    expected = [oracle(p) for p in prompt_set]
+    for chunk in (2, 32):
+        scfg = ServeConfig(block_size=4, num_blocks=32, slots=2,
+                           max_len_cap=32, prefill_chunk=chunk)
+        eng = Engine(cfg, params, scfg)
+        ids = [eng.submit(Request(tokens=p, max_new=max_new)) for p in prompt_set]
+        eng.run_until_drained()
+        got = [list(eng.result(i).tokens) for i in ids]
+        assert got == expected, f"chunk={chunk}"
+        eng.alloc.check_invariants()
+        assert eng.alloc.num_free == scfg.num_blocks - 1
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: eviction, preemption, API semantics
+# ---------------------------------------------------------------------------
+
+
+def test_eviction_mid_decode_returns_blocks(dense_model):
+    """A finishing request releases its blocks while batchmates decode on;
+    a preempted request recomputes and still matches the uncontended run."""
+    cfg, params = dense_model
+    prompt = tuple(int(t) for t in np.arange(7) % cfg.vocab_size)
+
+    roomy = ServeConfig(block_size=4, num_blocks=32, slots=2,
+                        max_len_cap=32, prefill_chunk=4)
+    ref_eng = Engine(cfg, params, roomy)
+    rid = ref_eng.submit(Request(tokens=prompt, max_new=6))
+    ref_eng.run_until_drained()
+    ref = list(ref_eng.result(rid).tokens)
+
+    # pool of 7 usable blocks; each request needs 7 to finish -> the two
+    # requests cannot coexist; the youngest must be preempted mid-decode
+    tight = ServeConfig(block_size=2, num_blocks=8, slots=2,
+                        max_len_cap=24, prefill_chunk=4)
+    eng = Engine(cfg, params, tight)
+    r1 = eng.submit(Request(tokens=prompt, max_new=6))
+    r2 = eng.submit(Request(tokens=prompt, max_new=6))
+    eng.run_until_drained(timeout_s=300)
+    assert eng.stats["preemptions"] >= 1
+    c1, c2 = eng.result(r1), eng.result(r2)
+    assert c1.finish_reason == "max_new" and c2.finish_reason == "max_new"
+    assert list(c1.tokens) == ref and list(c2.tokens) == ref
+    assert c2.preemptions >= 1  # younger request bore the eviction
+    eng.alloc.check_invariants()
+    assert eng.alloc.num_free == tight.num_blocks - 1  # everything returned
+
+
+def test_submit_poll_drain_api(dense_model):
+    cfg, params = dense_model
+    scfg = ServeConfig(block_size=4, num_blocks=32, slots=2,
+                       max_len_cap=16, prefill_chunk=8)
+    eng = Engine(cfg, params, scfg)
+    assert eng.poll() == [] and not eng.has_work()
+
+    r1 = eng.submit(Request(tokens=(3, 1, 4), max_new=2))
+    r2 = eng.submit(Request(tokens=(2, 7, 1, 8, 2), max_len=7, max_new=50))
+    assert eng.has_work()
+    done = eng.run_until_drained()
+    assert {c.request_id for c in done} == {r1, r2}
+    assert eng.poll() == []  # drained exactly once
+    c1, c2 = eng.result(r1), eng.result(r2)
+    assert c1.finish_reason == "max_new" and len(c1.tokens) == 2
+    # per-request max_len: 5-token prompt + 2 generated hits the cap of 7
+    assert c2.finish_reason == "length" and len(c2.tokens) == 2
+    assert c2.ttft_s >= 0 and c2.latency_s >= c2.ttft_s
+
+    # infeasible request (prompt longer than its own cap) errors, not hangs
+    r3 = eng.submit(Request(tokens=tuple(range(20)), max_new=4))
+    eng.run_until_drained()
+    assert eng.result(r3).finish_reason == "error"
+
+
+def test_request_validation():
+    with pytest.raises(ValueError):
+        Request(tokens=())
+    with pytest.raises(ValueError):
+        Request(tokens=(1, 2, 3), max_len=3)  # no room to generate
+    with pytest.raises(ValueError):
+        Request(tokens=(1,), max_new=0)
+    with pytest.raises(ValueError):
+        ServeConfig(num_blocks=1)  # needs scratch + >=1 usable block
+    r = Request(tokens=[jnp.int32(4), np.int64(2)])
+    assert r.tokens == (4, 2)  # coerced to plain ints
+
+
+def test_server_shim_deprecated_and_equivalent(dense_model):
+    cfg, params = dense_model
+    from repro.launch.serve import Server
+
+    with pytest.warns(DeprecationWarning):
+        srv = Server(cfg, params, max_len=32, slots=2)
+    prompt = jnp.asarray([3, 1, 4, 1, 5], jnp.int32)
+    outs = srv.generate([prompt], max_new=3)
+
+    toks = [int(t) for t in prompt]
+    for _ in range(3):
+        logits, _, _ = M.forward(cfg, params, {"tokens": jnp.asarray([toks], jnp.int32)})
+        toks.append(int(jnp.argmax(logits[0, -1])))
+    assert outs == [toks[5:]]
+    # the shim must not pin a dead contiguous cache (old Server.__init__ bug)
+    assert not hasattr(srv, "cache")
+
+
+def test_sampling_params_are_per_request(dense_model):
+    """Seeded sampling is reproducible and actually diverges from greedy."""
+    cfg, params = dense_model
+    scfg = ServeConfig(block_size=4, num_blocks=32, slots=2,
+                       max_len_cap=32, prefill_chunk=8)
+    prompt = (3, 1, 4, 1, 5)
+
+    def run(temp, seed):
+        eng = Engine(cfg, params, scfg)
+        rid = eng.submit(Request(tokens=prompt, max_new=8,
+                                 temperature=temp, top_k=0, seed=seed))
+        eng.run_until_drained()
+        return list(eng.result(rid).tokens)
+
+    greedy = run(0.0, 0)
+    s_a, s_b = run(5.0, 42), run(5.0, 42)
+    assert s_a == s_b  # same seed -> same stream
+    assert run(5.0, 43) != s_a or run(5.0, 44) != s_a  # seeds differ
+    assert greedy == run(0.0, 99)  # greedy ignores the seed
