@@ -141,6 +141,129 @@ def checkpoint_bytes_rows(quick: bool = False,
     return records
 
 
+ZERO_MEASURE_SCRIPT = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, json
+from repro.configs.base import GaLoreConfig, TrainConfig, get_config
+from repro.distributed.state_sharding import optimizer_state_axes
+from repro.launch.mesh import make_sim_mesh, default_rules
+from repro.models import model as M
+from repro.optim.factory import build_optimizer
+from repro.quant import QuantPolicy
+from repro.utils import is_axes
+
+cfg = get_config("llama_60m", smoke=True)
+key = jax.random.PRNGKey(0)
+params = M.init_params(cfg, key)
+p_axes = M.param_axes(cfg)
+rows = []
+for variant, quant in (("fp32", QuantPolicy()),
+                       ("int8m_int4p", QuantPolicy(moments="int8",
+                                                   projectors="int4"))):
+    for n_dp in (1, 4, 8):
+        gal = GaLoreConfig(rank=8, update_freq=4, zero=1, quant=quant)
+        tc = TrainConfig(optimizer="adamw", galore=gal,
+                         galore_external_refresh=True, galore_zero=1)
+        mesh = make_sim_mesh(n_dp)
+        rules = default_rules(mesh)
+        with mesh:
+            opt = build_optimizer(tc, param_axes=p_axes)
+            state = opt.init(params)
+            axes = optimizer_state_axes(
+                tc, p_axes, jax.eval_shape(lambda: M.init_params(cfg, key)))
+            def place(ax, s):
+                if not hasattr(s, "shape"):
+                    return s
+                return jax.device_put(s, rules.sharding_for(ax, s.shape))
+            state = jax.tree_util.tree_map(place, axes, state,
+                                           is_leaf=is_axes)
+        local = sum(l.addressable_shards[0].data.nbytes
+                    for l in jax.tree_util.tree_leaves(state))
+        rows.append({"variant": variant, "n_dp": n_dp,
+                     "opt_bytes_per_replica": local})
+print(json.dumps(rows))
+"""
+
+
+def zero_breakdown(quick: bool = False,
+                   out: str = "results/BENCH_zero.json") -> list:
+    """GaLore-ZeRO per-replica optimizer bytes: measured n_dp sweep + analytic.
+
+    Measured side: llama_60m smoke state is built, placed onto its ownership
+    shards (distributed/state_sharding.optimizer_state_axes — the same axes
+    launch/train.build_state uses), and each replica's REAL resident bytes
+    (`addressable_shards[0].data.nbytes`) are summed for n_dp ∈ {1, 4, 8} on
+    a simulated 8-device host, for the fp32 and the int8-moment/int4-projector
+    state layouts. The CI gate: ≥3× per-replica reduction at n_dp = 8
+    (asserted here) and exact byte totals via bench_diff --exact-analytic.
+
+    Analytic side: core/galore.galore_zero_state_bytes rows for llama_7b and
+    grok_1_314b at paper ranks — the scale story measurement can't reach.
+    """
+    import subprocess
+    import sys
+
+    from repro.core.galore import galore_zero_state_bytes
+
+    print("\n# GaLore-ZeRO per-replica optimizer bytes (measured, "
+          "llama_60m smoke, simulated 8-device host)")
+    env = dict(os.environ, PYTHONPATH="src", XLA_FLAGS="")
+    proc = subprocess.run([sys.executable, "-c", ZERO_MEASURE_SCRIPT],
+                          capture_output=True, text=True, env=env,
+                          timeout=1200)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    measured = json.loads(proc.stdout.strip().splitlines()[-1])
+    records = []
+    base = {}
+    print(f"{'variant':14s} {'n_dp':>4s} {'bytes/replica':>14s} {'vs n_dp=1':>10s}")
+    for row in measured:
+        key = row["variant"]
+        if row["n_dp"] == 1:
+            base[key] = row["opt_bytes_per_replica"]
+        red = base[key] / row["opt_bytes_per_replica"]
+        print(f"{key:14s} {row['n_dp']:4d} {row['opt_bytes_per_replica']:14d} "
+              f"{red:9.2f}x")
+        records.append({
+            "bench": "zero_bytes", "arch": "llama_60m", "smoke": True,
+            "mode": row["variant"], "n_dp": row["n_dp"],
+            "opt_bytes_per_replica": row["opt_bytes_per_replica"],
+            "zero_reduction_vs_ndp1": red,
+        })
+        if row["n_dp"] == 8:
+            # the tentpole bar: ≥3× per-replica optimizer bytes at n_dp=8
+            assert red >= 3.0, (key, red)
+            emit(f"zero.{key}.reduction_at_ndp8", 0, f"{red:.2f}x")
+
+    print("\n# GaLore-ZeRO analytic per-replica bytes (paper-scale)")
+    print(f"{'model':14s} {'n_dp':>4s} {'opt/replica':>12s} {'replicated':>11s} "
+          f"{'reduction':>9s}")
+    for name, r in (("llama_7b", 1024), ("grok_1_314b", 512)):
+        cfg = get_config(name)
+        struct = jax.eval_shape(
+            lambda c=cfg: M.init_params(c, jax.random.PRNGKey(0)))
+        gal = GaLoreConfig(rank=r,
+                           quant=QuantPolicy(moments="int8",
+                                             projectors="int4"))
+        for n_dp in (8,) if quick else (4, 8, 64):
+            acct = galore_zero_state_bytes(struct, gal, n_dp)
+            print(f"{name:14s} {n_dp:4d} "
+                  f"{gb(acct['opt_state_bytes_per_replica']):10.2f}G "
+                  f"{gb(acct['replicated_opt_state_bytes']):10.2f}G "
+                  f"{acct['zero_reduction_vs_replicated']:8.2f}x")
+            records.append({
+                "bench": "zero_bytes_analytic", "arch": name, "n_dp": n_dp,
+                "opt_bytes_per_replica": acct["opt_state_bytes_per_replica"],
+                "replicated_opt_bytes": acct["replicated_opt_state_bytes"],
+                "zero_reduction": acct["zero_reduction_vs_replicated"],
+            })
+    os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(records, f, indent=2)
+    print(f"# wrote {out} ({len(records)} rows)")
+    return records
+
+
 def main(quick: bool = False):
     sizes = (["llama_60m", "llama_7b"] if quick
              else ["llama_60m", "llama_130m", "llama_350m", "llama_1b", "llama_7b"])
@@ -193,5 +316,13 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="2 sizes + assert quantized < fp32 (the CI gate)")
+    ap.add_argument("--zero", action="store_true",
+                    help="GaLore-ZeRO per-replica bytes only: measured "
+                         "n_dp sweep (simulated 8-device subprocess) + "
+                         "analytic paper-scale rows -> results/BENCH_zero.json"
+                         " (asserts >=3x at n_dp=8)")
     args = ap.parse_args()
-    main(quick=args.quick)
+    if args.zero:
+        zero_breakdown(quick=args.quick)
+    else:
+        main(quick=args.quick)

@@ -1,0 +1,51 @@
+"""Check that relative markdown links in README.md and docs/*.md resolve.
+
+Filesystem-only (no network): external http(s) links and pure anchors are
+skipped; every other link target must exist relative to the linking file.
+CI runs this in the docs job:
+
+    python docs/check_links.py          # exit 1 on any broken link
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+# [text](target) — ignores images' leading ! by matching the paren pair only
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def check_file(path: str) -> list[str]:
+    broken = []
+    base = os.path.dirname(path)
+    for m in _LINK_RE.finditer(open(path).read()):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        target = target.split("#", 1)[0]  # strip section anchors
+        if not target:
+            continue
+        if not os.path.exists(os.path.join(base, target)):
+            broken.append(f"{os.path.relpath(path, REPO)}: broken link -> {target}")
+    return broken
+
+
+def main() -> int:
+    files = [os.path.join(REPO, "README.md")]
+    files += sorted(glob.glob(os.path.join(REPO, "docs", "*.md")))
+    broken = []
+    for f in files:
+        broken += check_file(f)
+    for line in broken:
+        print(line, file=sys.stderr)
+    print(f"checked {len(files)} files: "
+          f"{'FAIL' if broken else 'ok'} ({len(broken)} broken)")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,110 @@
+"""Generate docs/cli.md from the launchers' argparse builders.
+
+Each launcher exposes a module-level ``build_parser()`` (launch/train.py,
+launch/dryrun.py, launch/serve.py) whose flags — including the shared
+``launch/cli.py`` groups — are introspected here into one markdown reference.
+The output is deterministic, so CI can regenerate it and fail on drift:
+
+    PYTHONPATH=src python docs/gen_cli.py            # (re)write docs/cli.md
+    PYTHONPATH=src python docs/gen_cli.py --check    # exit 1 if cli.md drifts
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import os
+import sys
+
+LAUNCHERS = (
+    ("repro.launch.train", "Training launcher"),
+    ("repro.launch.dryrun", "Dry-run analyzer"),
+    ("repro.launch.serve", "Serving engine"),
+)
+
+HEADER = """\
+# CLI reference
+
+<!-- GENERATED FILE — do not edit by hand.
+     Regenerate with: PYTHONPATH=src python docs/gen_cli.py
+     CI regenerates and diffs this file (docs job); edits to the flag
+     surface belong in the launch/*.py build_parser() builders and the
+     shared launch/cli.py groups. -->
+"""
+
+
+def _default(action) -> str:
+    if action.default is None or action.default == "==SUPPRESS==":
+        return ""
+    if isinstance(action.default, bool):
+        return "" if action.default is False else "`True`"
+    if action.default == []:
+        return ""
+    return f"`{action.default}`"
+
+
+def _value(action) -> str:
+    """The flag's value syntax: choices, metavar, or the dest placeholder."""
+    if isinstance(action, (argparse._StoreTrueAction, argparse._StoreFalseAction)):
+        return ""
+    if action.choices is not None:
+        return "{" + ",".join(str(c) for c in action.choices) + "}"
+    if action.metavar:
+        return str(action.metavar)
+    if action.nargs == "*":
+        return f"[{action.dest.upper()} ...]"
+    return action.dest.upper()
+
+def _help(action) -> str:
+    text = " ".join((action.help or "").split())
+    return text.replace("|", "\\|")
+
+
+def render_parser(modname: str, title: str) -> str:
+    mod = importlib.import_module(modname)
+    ap = mod.build_parser()
+    lines = [f"## `python -m {modname}` — {title}", ""]
+    if ap.description:
+        lines += [ap.description, ""]
+    lines += ["| flag | value | default | description |",
+              "| --- | --- | --- | --- |"]
+    for action in ap._actions:
+        if isinstance(action, argparse._HelpAction):
+            continue
+        flags = ", ".join(f"`{s}`" for s in action.option_strings)
+        lines.append(
+            f"| {flags} | {_value(action)} | {_default(action)} "
+            f"| {_help(action)} |")
+    lines.append("")
+    return "\n".join(lines)
+
+
+def generate() -> str:
+    return HEADER + "\n" + "\n".join(
+        render_parser(mod, title) for mod, title in LAUNCHERS)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 if docs/cli.md does not match the builders")
+    args = ap.parse_args()
+    out_path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "cli.md")
+    text = generate()
+    if args.check:
+        on_disk = open(out_path).read() if os.path.exists(out_path) else ""
+        if on_disk != text:
+            sys.stderr.write(
+                "docs/cli.md is stale — regenerate with "
+                "`PYTHONPATH=src python docs/gen_cli.py`\n")
+            return 1
+        print("docs/cli.md is up to date")
+        return 0
+    with open(out_path, "w") as f:
+        f.write(text)
+    print(f"wrote {out_path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

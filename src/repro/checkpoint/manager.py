@@ -103,6 +103,35 @@ def _flatten(tree):
 
 
 class CheckpointManager:
+    """Atomic, optionally async + quantized checkpoints under one root dir.
+
+    Each step commits as ``root/step_XXXXXXXX/`` holding one ``host_N.npz``
+    per process and a ``META.json`` (dtypes, top-level groups, optional
+    per-file crc32s, per-leaf quantization records). Saves gather to host
+    (``device_get``) so files are always the full replicated layout; a
+    sharded run (e.g. ``--galore-zero``) re-places leaves at restore time
+    via the ``shardings`` argument, which makes checkpoints elastic across
+    replica counts.
+
+    Parameters
+    ----------
+    root : str
+        Checkpoint directory (created if missing; stale ``*.tmp_<pid>``
+        litter from killed saves is GC'd on init).
+    keep : int, optional
+        Newest committed steps retained; older ones are deleted after
+        each successful save.
+    async_save : bool, optional
+        Write on a daemon thread; failures re-raise on the next
+        ``wait()``/``save()``.
+    checksum : bool, optional
+        Record per-file crc32s in META (exact torn-file detection). Off
+        by default so the on-disk layout matches the unguarded original.
+    quantize : {None, "int8", "int4"}, optional
+        File codec for large float ``params.`` leaves; restore is
+        META-driven so mixed histories coexist in one root.
+    """
+
     def __init__(self, root: str, keep: int = 3, async_save: bool = True,
                  checksum: bool = False, quantize: str | None = None):
         self.root = root
@@ -131,6 +160,21 @@ class CheckpointManager:
     # -- save ---------------------------------------------------------------
 
     def save(self, step: int, tree, extra_meta: dict | None = None, block: bool = False):
+        """Commit `tree` as the checkpoint for `step`.
+
+        Parameters
+        ----------
+        step : int
+            Training step; names the ``step_XXXXXXXX`` directory.
+        tree : pytree
+            State to save. A top-level dict records its sorted keys as
+            META ``groups`` so restore can rebuild optional groups (e.g.
+            the async refresh's pending buffer).
+        extra_meta : dict, optional
+            Merged into META.json verbatim.
+        block : bool, optional
+            Force a synchronous write even when ``async_save`` is on.
+        """
         arrays, dtypes, _ = _flatten(tree)
         # original dtype of every leaf (npz widens bf16; uint8 quantization
         # codes and f32 scales of the quantized optimizer trees round-trip
@@ -214,6 +258,7 @@ class CheckpointManager:
         self._gc()
 
     def wait(self):
+        """Join any in-flight async save; re-raise its failure if it died."""
         if self._thread is not None and self._thread.is_alive():
             self._thread.join()
         if self._save_exc is not None:
@@ -228,6 +273,7 @@ class CheckpointManager:
     # -- load ---------------------------------------------------------------
 
     def all_steps(self) -> list[int]:
+        """Sorted committed steps (directories with a META.json) under root."""
         out = []
         for name in sorted(os.listdir(self.root)):
             m = _STEP_RE.match(name)
@@ -236,6 +282,7 @@ class CheckpointManager:
         return sorted(out)
 
     def latest_step(self) -> int | None:
+        """Newest committed step, or None when the root is empty."""
         steps = self.all_steps()
         return steps[-1] if steps else None
 
@@ -282,6 +329,7 @@ class CheckpointManager:
         return None
 
     def meta(self, step: int) -> dict:
+        """Parsed META.json for `step` (raises FileNotFoundError if absent)."""
         with open(os.path.join(self.root, f"step_{step:08d}", "META.json")) as f:
             return json.load(f)
 
@@ -293,10 +341,28 @@ class CheckpointManager:
         return tuple(self.meta(step).get("groups", ()))
 
     def restore(self, step: int, target_tree, shardings=None):
-        """Restore into the structure of target_tree.
+        """Restore the checkpoint at `step` into the structure of `target_tree`.
 
-        `shardings`: optional pytree of NamedShardings (may belong to a mesh
-        of a *different* shape than the one that saved — elastic restore).
+        Parameters
+        ----------
+        step : int
+            Committed step to read.
+        target_tree : pytree
+            Structure (and dtypes) to restore into; quantized file-codec
+            leaves dequantize via META with unconditional crc verification,
+            and a float/integer kind mismatch against a leaf's saved dtype
+            raises (quantized and fp32 state layouts never silently cast).
+        shardings : pytree of NamedSharding, optional
+            Per-leaf placements, zipped with `target_tree`'s leaves in flat
+            order (None entries mean default placement). The mesh may have a
+            *different* shape than the one that saved — files hold the full
+            replicated layout, so this is the elastic-restore hook that
+            re-shards ``--galore-zero`` state across replica counts.
+
+        Returns
+        -------
+        pytree
+            `target_tree`'s structure with restored, placed leaves.
         """
         path = os.path.join(self.root, f"step_{step:08d}")
         data = {}

@@ -165,6 +165,27 @@ class GaLoreConfig:
     # All-fp32 default keeps the state layout bit-identical to the unquantized
     # original; resolved into per-leaf SubspacePlan.moments / .proj_store.
     quant: QuantPolicy = QuantPolicy()
+    # --- GaLore-ZeRO: owner-partitioned optimizer state (PR 10) ---
+    zero: int = 0  # 0: every replica holds the full compact state (original
+    # layout, bit for bit). 1: shard the persistent optimizer state over the
+    # data-parallel replicas — each replica owns a rank-block of every galore
+    # leaf's compact moments + stored projector (and a block of one weight dim
+    # for passthrough moments), so per-replica optimizer bytes scale ~1/n_dp
+    # on top of the quantized reduction. The rank-block ownership map is
+    # SubspaceManager.ownership_axes; the update's back-projection
+    # ΔW = α Σ_s P[:,s] N̂[s,:] sums the per-owner outer products — that psum
+    # IS the weight-delta all-gather (int8/int4 code layouts block along the
+    # non-rank axis, so the shards are bitwise slices; only the f32 delta
+    # reduction order changes, hence the ≤2e-5 parity bar). 2: additionally
+    # reduce-scatter gradients to owners — each DP shard projects its LOCAL
+    # gradient and the cross-replica mean runs in the compact rank-sharded
+    # domain (requires the dp-compress step path and fp32 moments).
+    tp_aware_side: bool = False  # sharding-aware left/right projector choice
+    # (ColossalAI get_shard_dim direction): when exactly one dim of a weight
+    # is model-sharded, project along the REPLICATED dim — refresh and update
+    # then never gather the tensor-parallel dim. Changes which side P
+    # multiplies on for affected leaves (different numerics from the paper's
+    # pure m<=n rule), so off by default.
 
 
 @dataclasses.dataclass(frozen=True)
@@ -211,6 +232,13 @@ class TrainConfig:
     galore_fused_apply: bool = False  # fold W ← W + G̃ into the fused-kernel
     # epilogue (requires galore_fused_adam; drops the full-size f32 update
     # write — the two-step chain path remains the numerics oracle)
+    galore_zero: int = 0  # GaLore-ZeRO stage (routed into GaLoreConfig.zero
+    # by optim/factory.effective_galore_config): 1 shards the persistent
+    # optimizer state rank-blockwise over the data-parallel replicas
+    # (~1/n_dp per-replica optimizer bytes, ≤2e-5 f32 step parity — int
+    # codes bitwise); 2 additionally reduce-scatters projected gradients to
+    # owners (implies galore_dp_compress; fp32 moments only). 0 is the exact
+    # replicated layout, bit for bit.
     z_loss: float = 0.0
     # --- fault tolerance (src/repro/robust/) -------------------------------
     anomaly_guard: bool = False  # per-step anomaly guard inside the train

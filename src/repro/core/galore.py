@@ -52,7 +52,9 @@ from repro.core.subspace import (
     SubspaceManager,
     SubspacePlan,
     _lead,
+    constrain_zero_moment,
     moment_quant_axis,
+    plan_rank_axis,
     proj_shape,
     r_shape,
     rank_axis,
@@ -72,9 +74,11 @@ def plan_for_params(params, cfg: GaLoreConfig, exclude=DEFAULT_EXCLUDE, param_ax
 def _project(g, P, plan: SubspacePlan):
     if plan.side == "left":  # P (..., m, r): R = P^T G -> (..., r, n)
         R = jnp.einsum("...mr,...mn->...rn", P, g.astype(jnp.float32))
-        return logical_constraint(R, *_lead(R, rank_axis(plan.ax_n), plan.ax_n))
+        return logical_constraint(
+            R, *_lead(R, plan_rank_axis(plan, plan.ax_n), plan.ax_n))
     R = jnp.einsum("...mn,...nr->...mr", g.astype(jnp.float32), P)
-    return logical_constraint(R, *_lead(R, plan.ax_m, rank_axis(plan.ax_m)))
+    return logical_constraint(
+        R, *_lead(R, plan.ax_m, plan_rank_axis(plan, plan.ax_m)))
 
 
 def _project_back(R, P, plan: SubspacePlan):
@@ -219,6 +223,14 @@ def galore(
 
             # --- 3) inner optimizer in the compact space ---
             lor_updates, inner_state = inner.update(lor_grads, state["inner"], params)
+            if cfg.zero and isinstance(inner_state, dict) and \
+                    "m" in inner_state and "v" in inner_state:
+                # GaLore-ZeRO: pin the Adam-shaped inner moments to their
+                # ownership shards (the rank-block each DP replica owns)
+                inner_state = dict(inner_state)
+                for _k in ("m", "v"):
+                    inner_state[_k] = jax.tree_util.tree_map(
+                        constrain_zero_moment, inner_state[_k], plans)
 
             # --- 4) project back + alpha scale ---
             def back_leaf(u, P, plan):
@@ -347,6 +359,8 @@ def _managed_adam_update(grads, proj_eff, inner_state, plans, cfg: GaLoreConfig,
             out, m_t, v_t = ref.lowrank_adam_update(g, m, v, count, b1, b2, eps)
             if qm:
                 m_t, v_t = requant_mv(m_t, v_t, plan)
+            m_t = constrain_zero_moment(m_t, plan)
+            v_t = constrain_zero_moment(v_t, plan)
             return finish(out.astype(g.dtype), p), m_t, v_t
 
         if fused and qm:
@@ -393,6 +407,10 @@ def _managed_adam_update(grads, proj_eff, inner_state, plans, cfg: GaLoreConfig,
                 m_t, v_t = requant_mv(m_t, v_t, plan)
             upd = finish(upd, p)
         upd = logical_constraint(upd, *_lead(upd, plan.ax_m, plan.ax_n))
+        # GaLore-ZeRO: the updated moments land on their ownership shard —
+        # the persistent compact state never re-replicates across steps
+        m_t = constrain_zero_moment(m_t, plan)
+        v_t = constrain_zero_moment(v_t, plan)
         return upd, m_t, v_t
 
     flat_g, treedef = jax.tree_util.tree_flatten(grads)
@@ -626,4 +644,68 @@ def galore_state_bytes(params, cfg: GaLoreConfig, exclude=DEFAULT_EXCLUDE) -> di
         "optimizer_state_bytes": opt_bytes,
         "fp32_adam_state_bytes": fp32_adam,
         "reduction_vs_fp32_adam": 1.0 - opt_bytes / max(fp32_adam, 1),
+    }
+
+
+def galore_zero_state_bytes(params, cfg: GaLoreConfig, n_dp: int,
+                            exclude=DEFAULT_EXCLUDE) -> dict:
+    """Analytic PER-REPLICA optimizer bytes under GaLore-ZeRO ownership.
+
+    Mirrors the ``core/subspace.zero_state_axes`` contract (GaLoreConfig.zero):
+    galore compact moments, projector stores and their quantized scales divide
+    by ``n_dp`` on the rank dim; full-shape passthrough moments divide on dim
+    -2. A dim that does not divide ``n_dp`` replicates, exactly as
+    ``ShardingRules.spec_for`` falls back at trace time — so these totals
+    match the measured ``addressable_shards[0].data.nbytes`` accounting in
+    benchmarks/memory_breakdown.py up to the per-block scale remainders.
+
+    Parameters
+    ----------
+    params : pytree
+        Parameter arrays or ShapeDtypeStructs.
+    cfg : GaLoreConfig
+        Resolved config (``cfg.zero`` does not need to be set; this reports
+        what ownership WOULD cost at ``n_dp`` replicas).
+    n_dp : int
+        Data-parallel replica count owning the partition.
+    exclude : tuple of str
+        Leaf-name substrings kept out of the galore projection.
+
+    Returns
+    -------
+    dict
+        Per-replica byte totals plus the replicated baseline and the
+        reduction factor ``replicated / per_replica``.
+    """
+    import numpy as np
+
+    full = galore_state_bytes(params, cfg, exclude)
+    plans = plan_for_params(params, cfg, exclude)
+    proj_b = 0.0
+    mom_b = 0.0
+    for (path, p), (_, plan) in zip(
+        jax.tree_util.tree_leaves_with_path(params),
+        jax.tree_util.tree_leaves_with_path(
+            plans, is_leaf=lambda x: isinstance(x, SubspacePlan)),
+    ):
+        size = int(np.prod(p.shape))
+        mb = _MOMENT_BYTES[plan.moments]
+        if plan.galore:
+            div = n_dp if plan.rank % n_dp == 0 else 1
+            mom_b += 2 * int(np.prod(r_shape(p, plan))) * mb / div
+            proj_b += (int(np.prod(proj_shape(p, plan)))
+                       * _PROJ_BYTES[plan.proj_store] / div)
+        else:
+            div = (n_dp if len(p.shape) >= 2 and p.shape[-2] % n_dp == 0
+                   else 1)
+            mom_b += 2 * size * mb / div
+    opt = proj_b + mom_b
+    return {
+        "n_dp": n_dp,
+        "projector_bytes_per_replica": proj_b,
+        "moment_bytes_per_replica": mom_b,
+        "opt_state_bytes_per_replica": opt,
+        "replicated_opt_state_bytes": full["optimizer_state_bytes"],
+        "zero_reduction_vs_replicated": (full["optimizer_state_bytes"]
+                                         / max(opt, 1.0)),
     }

@@ -152,6 +152,138 @@ def rank_axis(kept_label):
     return "rank_model" if kept_label in (None, "embed") else "rank_data"
 
 
+def plan_rank_axis(plan: "SubspacePlan", kept_label):
+    """Logical axis for a leaf's rank dim, ownership-aware.
+
+    Parameters
+    ----------
+    plan : SubspacePlan
+        The leaf's plan; ``plan.zero`` marks GaLore-ZeRO ownership.
+    kept_label : str or None
+        Logical label of the leaf's kept weight dim.
+
+    Returns
+    -------
+    str
+        ``"zero"`` (the data-parallel ownership axis, launch/mesh.py) when
+        the leaf's state is owner-partitioned, else the mesh-complementary
+        ``rank_axis`` label. Under ZeRO every compact state's rank dim lands
+        on the DP axes, so each replica persistently holds only its own
+        rank block — ~1/n_dp of every galore leaf's moments and projector.
+    """
+    return "zero" if plan.zero else rank_axis(kept_label)
+
+
+# Logical weight-dim labels that launch/mesh.default_rules places on the
+# tensor-parallel ("model") mesh axis — the table cfg.tp_aware_side consults
+# to keep the KEPT (projected-onto) dim off the TP axis.
+TP_LABELS = frozenset({"ff", "heads_flat", "kv_flat", "vocab"})
+
+
+def zero_state_axes(plan: "SubspacePlan", ax) -> dict:
+    """Owner-partitioned logical axes for ONE leaf's persistent state.
+
+    The GaLore-ZeRO ownership contract (GaLoreConfig.zero): each DP replica
+    owns one rank block of every galore leaf's compact state, so the rank
+    dim of the moments, the stored projector, and their quantized scales all
+    carry the ``"zero"`` logical axis (→ the data mesh axes). The int8/int4
+    code layouts block along the NON-rank axis (quant/codec.py), so a rank
+    block is a bitwise slice of the replicated codes — which is what makes
+    owner-sharded state checkpoint-portable across n_dp and keeps the int
+    parity bar bitwise. Passthrough leaves shard their full-shape moments on
+    the parameter axes (the FSDP dim already maps to data).
+
+    Parameters
+    ----------
+    plan : SubspacePlan
+        The leaf's plan (side/rank/quant modes).
+    ax : tuple or None
+        The leaf's parameter logical axes, or None when unlabeled.
+
+    Returns
+    -------
+    dict
+        ``{"moment", "moment_scale", "proj", "proj_scale"}`` logical-axes
+        tuples for the leaf's moment codes, per-block moment scales,
+        projector store codes, and projector scales. Collisions (two dims
+        mapping to the same mesh axis) and non-divisible dims resolve to
+        replication inside ShardingRules.spec_for.
+    """
+    ax = tuple(ax) if ax is not None else None
+    if not plan.galore:
+        mom = ax if ax is not None else ()
+        if plan.zero and len(mom) >= 2:
+            # ZeRO shards the full-shape passthrough moments too (they
+            # dominate optimizer bytes once the galore leaves are compact):
+            # dim -2 takes the ownership axis (same position whether this is
+            # called with the full axes tuple or the plan's last-two labels)
+            # — int8 passthrough moments block along the LAST axis
+            # (moment_quant_axis), so the shard is still a bitwise slice
+            mom = tuple(mom[:-2]) + ("zero", mom[-1])
+        scale = (tuple(mom[:-1]) + (None,)) if mom else ()
+        return {"moment": mom, "moment_scale": scale, "proj": (),
+                "proj_scale": ()}
+    lead = tuple(ax[:-2]) if ax is not None else ()
+    am = ax[-2] if ax is not None else None
+    an = ax[-1] if ax is not None else None
+    if plan.side == "left":  # moments (..., r, n); scales (..., r, nb)
+        mom = lead + ("zero", an)
+        mscale = lead + ("zero", None)
+        kept = am
+    else:  # moments (..., m, r); scales (..., nb, r)
+        mom = lead + (am, "zero")
+        mscale = lead + (None, "zero")
+        kept = an
+    if plan.proj_store == "int4":
+        # packed codes (..., kept_pad/2, r): the blocked kept dim takes the
+        # FSDP axis first; "zero" on the rank dim is the fallback when the
+        # packed dim does not divide the mesh
+        proj = lead + ("qblocks", "zero")
+        pscale = lead + (None, "zero")
+    else:
+        proj = lead + (kept, "zero")
+        pscale = ()
+    return {"moment": mom, "moment_scale": mscale, "proj": proj,
+            "proj_scale": pscale}
+
+
+def _plan_ax_pair(plan: "SubspacePlan"):
+    if plan.ax_m is None and plan.ax_n is None:
+        return None
+    return (plan.ax_m, plan.ax_n)
+
+
+def constrain_zero_moment(mom, plan: "SubspacePlan"):
+    """Pin one moment leaf (fp32 array or int8 ``{"q","scale"}`` qstate) to
+    its ZeRO ownership axes. No-op when ``plan.zero`` is off or outside a
+    sharding context — the replicated program is untouched bit for bit."""
+    if not plan.zero:
+        return mom
+    axd = zero_state_axes(plan, _plan_ax_pair(plan))
+    if isinstance(mom, dict):
+        return {
+            "q": logical_constraint(mom["q"], *_lead(mom["q"], *axd["moment"])),
+            "scale": logical_constraint(
+                mom["scale"], *_lead(mom["scale"], *axd["moment_scale"])),
+        }
+    return logical_constraint(mom, *_lead(mom, *axd["moment"]))
+
+
+def constrain_zero_store(store, plan: "SubspacePlan"):
+    """Pin one projector store (fp32/bf16 array or packed int4 qstate) to
+    its ZeRO ownership axes; no-op off-zero / outside a sharding context."""
+    if not (plan.zero and plan.galore):
+        return store
+    axd = zero_state_axes(plan, _plan_ax_pair(plan))
+    if isinstance(store, dict):
+        return {
+            "q": logical_constraint(store["q"], *_lead(store["q"], *axd["proj"])),
+            "scale": logical_constraint(
+                store["scale"], *_lead(store["scale"], *axd["proj_scale"])),
+        }
+    return logical_constraint(store, *_lead(store, *axd["proj"]))
+
+
 @dataclasses.dataclass(frozen=True)
 class SubspacePlan:
     """Per-leaf subspace decision. Extends the old LeafPlan with the leaf's
@@ -169,6 +301,11 @@ class SubspacePlan:
     moments: str = "fp32"  # "fp32" | "int8" — Adam M/V storage for this leaf
     # (compact moments for galore leaves, full-shape for passthrough leaves)
     proj_store: str = "fp32"  # "fp32" | "bf16" | "int4" — persistent P storage
+    # --- GaLore-ZeRO ownership (GaLoreConfig.zero, PR 10) ---
+    zero: bool = False  # this leaf's persistent optimizer state is owner-
+    # partitioned over the data-parallel replicas: the rank dim (galore
+    # leaves) or a weight dim (passthrough leaves) carries the "zero"
+    # logical axis, so each replica holds only its rank block
 
 
 # Backwards-compatible name: consumers that only read galore/side/ax_* keep
@@ -275,9 +412,18 @@ class SubspaceManager:
 
     @property
     def adaptive(self) -> bool:
+        """Whether Q-GaLore adaptive refresh periods are enabled."""
         return bool(self.cfg.adaptive_t)
 
     def t_bounds(self) -> tuple[int, int]:
+        """Clamp range ``(t_min, t_max)`` for adaptive refresh periods.
+
+        Returns
+        -------
+        tuple of int
+            ``cfg.t_min``/``cfg.t_max`` when set, else ``(T // 4, 8 * T)``
+            around the base period ``T = cfg.update_freq``.
+        """
         T = self.cfg.update_freq
         t_min = self.cfg.t_min or max(1, T // 4)
         t_max = self.cfg.t_max or 8 * T
@@ -294,6 +440,22 @@ class SubspaceManager:
                               self.cfg.power_iters)
 
     def leaf_rank(self, path: str, m: int, n: int) -> int:
+        """Projection rank for one ``(m, n)`` leaf.
+
+        Parameters
+        ----------
+        path : str
+            "/"-joined param-tree path; matched (substring) against
+            ``cfg.rank_overrides`` patterns, first hit wins.
+        m, n : int
+            Trailing two dims of the weight.
+
+        Returns
+        -------
+        int
+            Override rank, else ``rank_frac * min(m, n)`` when
+            ``cfg.rank_frac > 0``, else the global ``cfg.rank``.
+        """
         for pattern, r in self.cfg.rank_overrides:
             if pattern in path:
                 return int(r)
@@ -317,6 +479,7 @@ class SubspaceManager:
             ax_map = {path_str(pth): a for pth, a in flat_ax}
 
         cfg = self.cfg
+        zero = cfg.zero > 0
         flat, treedef = jax.tree_util.tree_flatten_with_path(params)
         raw: list[SubspacePlan] = []
         paths: list[str] = []
@@ -327,20 +490,36 @@ class SubspaceManager:
             # weight, not the compact moment) — see quant/policy.py
             size = int(np.prod(p.shape)) if hasattr(p, "shape") else 0
             moments, proj_store = cfg.quant.resolve(path, size)
+            ax = ax_map.get(path)
+            # passthrough plans keep their weight-dim labels so the ZeRO
+            # ownership map can shard full-shape moments on the param axes
+            pass_ax = dict(ax_m=ax[-2], ax_n=ax[-1]) if (
+                ax and hasattr(p, "ndim") and p.ndim >= 2) else {}
             if not hasattr(p, "ndim") or p.ndim < 2 or any(e in path for e in self.exclude):
-                raw.append(SubspacePlan(False, moments=moments))
+                raw.append(SubspacePlan(False, moments=moments, zero=zero,
+                                        **pass_ax))
                 continue
             m, n = p.shape[-2], p.shape[-1]
             rank = self.leaf_rank(path, m, n)
             if min(m, n) <= max(rank, cfg.min_dim):
-                raw.append(SubspacePlan(False, moments=moments))
+                raw.append(SubspacePlan(False, moments=moments, zero=zero,
+                                        **pass_ax))
                 continue
-            ax = ax_map.get(path)
+            side = "left" if m <= n else "right"
+            if cfg.tp_aware_side and ax is not None:
+                # get_shard_dim-style (ColossalAI direction): when exactly one
+                # weight dim is tensor-parallel, keep the REPLICATED dim as
+                # P's row space — refresh and update then never touch the TP
+                # dim, so neither needs a gather across the model axis
+                m_tp = ax[-2] in TP_LABELS
+                n_tp = ax[-1] in TP_LABELS
+                if m_tp != n_tp:
+                    side = "right" if m_tp else "left"
             raw.append(SubspacePlan(
-                True, "left" if m <= n else "right",
+                True, side,
                 ax[-2] if ax else None, ax[-1] if ax else None,
                 rank=rank, refresh_period=cfg.update_freq,
-                moments=moments, proj_store=proj_store,
+                moments=moments, proj_store=proj_store, zero=zero,
             ))
 
         galore_idx = [i for i, pl in enumerate(raw) if pl.galore]
@@ -428,6 +607,46 @@ class SubspaceManager:
             arrs[li][ei] = shard
             loads[shard] += cost
         return jax.tree_util.tree_unflatten(treedef, arrs), loads
+
+    def ownership_axes(self, params, plans=None):
+        """Owner-partitioned persistent-state axes for every leaf (ZeRO map).
+
+        ``partition_refresh`` assigns the refresh *work* (which replica runs
+        which SVD unit); this is the matching persistent-state *ownership*
+        map under GaLoreConfig.zero: which logical dims of each leaf's
+        moments / projector / scales carry the ``"zero"`` axis, i.e. which
+        rank block a DP replica holds. distributed/state_sharding.py derives
+        the optimizer-state sharding specs from this tree, core/galore.py
+        constrains the in-step state outputs to it, and the memory benchmark
+        measures per-replica bytes against it — one source of truth.
+
+        Parameters
+        ----------
+        params : pytree
+            Parameter (or ShapeDtypeStruct) tree.
+        plans : pytree of SubspacePlan, optional
+            Precomputed ``self.plans(params)``.
+
+        Returns
+        -------
+        pytree
+            A tree mirroring ``params`` whose leaves are the
+            ``zero_state_axes`` dicts.
+        """
+        plans = self.plans(params) if plans is None else plans
+        ax_map = {}
+        if self.param_axes is not None:
+            from repro.utils import is_axes
+
+            flat_ax, _ = jax.tree_util.tree_flatten_with_path(
+                self.param_axes, is_leaf=is_axes)
+            ax_map = {path_str(pth): a for pth, a in flat_ax}
+        flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+        out = [
+            zero_state_axes(plan, ax_map.get(path_str(pth)))
+            for (pth, _), plan in zip(flat, treedef.flatten_up_to(plans))
+        ]
+        return jax.tree_util.tree_unflatten(treedef, out)
 
     # -- schedule state ----------------------------------------------------
 
@@ -596,6 +815,9 @@ class SubspaceManager:
                     lambda new, old: jnp.where(changed, new, old),
                     new_store, P_store,
                 )
+            # GaLore-ZeRO: the refreshed store lands straight on its
+            # ownership shard so the persistent state never re-replicates
+            new_store = constrain_zero_store(new_store, plan)
             if not adaptive:
                 return new_store, per, nxt, ov_old
             ov = subspace_overlap_mean(P_new, P_old)

@@ -76,14 +76,24 @@ def _adafactor_axes(p_axes, p_struct, beta1):
 
 def _projected_axes(p_axes, p_struct, gcfg: GaLoreConfig):
     """Axes of the *projected-gradient* tree (what galore's inner optimizer sees)."""
-    plans = plan_for_params(p_struct, gcfg)
+    plans = plan_for_params(p_struct, gcfg, param_axes=p_axes)
 
     def per_leaf(ax, plan):
         if not plan.galore:
+            if plan.zero and ax is not None and len(ax) >= 2:
+                # passthrough moments are full-shape and dominate optimizer
+                # bytes under ZeRO — dim -2 takes the ownership axis
+                # (core/subspace.py zero_state_axes passthrough branch)
+                return tuple(ax[:-2]) + ("zero", ax[-1])
             return ax
+        # under GaLore-ZeRO (plan.zero) the rank dim is the ownership dim:
+        # it carries "zero" (-> the data axes) instead of the complementary
+        # rank_model/rank_data label, so the compact moments persist sharded
+        # ~1/n_dp per replica (core/subspace.py zero_state_axes)
+        rax = (lambda kept: "zero") if plan.zero else _rank_axis
         if plan.side == "left":  # R (..., r, n)
-            return tuple(ax[:-2]) + (_rank_axis(ax[-1]), ax[-1])
-        return tuple(ax[:-2]) + (ax[-2], _rank_axis(ax[-2]))  # R (..., m, r)
+            return tuple(ax[:-2]) + (rax(ax[-1]), ax[-1])
+        return tuple(ax[:-2]) + (ax[-2], rax(ax[-2]))  # R (..., m, r)
 
     return jax.tree_util.tree_map(
         per_leaf, p_axes, plans, is_leaf=is_axes
@@ -91,22 +101,26 @@ def _projected_axes(p_axes, p_struct, gcfg: GaLoreConfig):
 
 
 def _galore_proj_axes(p_axes, p_struct, gcfg: GaLoreConfig):
-    plans = plan_for_params(p_struct, gcfg)
+    plans = plan_for_params(p_struct, gcfg, param_axes=p_axes)
 
     def per_leaf(ax, plan):
         if not plan.galore:
             return SCALAR  # scalar placeholder
+        # under GaLore-ZeRO the stored P's rank dim carries the "zero"
+        # ownership axis (each replica persists only its rank block); the
+        # replicated-rank rule below otherwise stands (core/projector.py)
+        rk = "zero" if plan.zero else None
         if plan.proj_store == "int4":
             # axis-blocked packed layout (codec.quantize4_axis): codes
             # (..., kept_pad/2, r) shard the packed kept dim on the FSDP
             # axis ("qblocks" -> data); the per-(block, column) scales
             # (..., nb, r) are 1/(2·QBLOCK) of the codes' bytes and stay
-            # replicated (their blocked dim rarely divides the mesh)
-            return {"q": tuple(ax[:-2]) + ("qblocks", None),
-                    "scale": tuple(ax[:-2]) + (None, None)}
+            # replicated (their blocked dim rarely divides the mesh) unless
+            # ZeRO owns their rank dim
+            return {"q": tuple(ax[:-2]) + ("qblocks", rk),
+                    "scale": tuple(ax[:-2]) + (None, rk)}
         kept = ax[-2] if plan.side == "left" else ax[-1]
-        # P's rank dim stays replicated (see core/projector.py sharding note)
-        return tuple(ax[:-2]) + (kept, None)
+        return tuple(ax[:-2]) + (kept, rk)
 
     return jax.tree_util.tree_map(
         per_leaf, p_axes, plans, is_leaf=is_axes
@@ -117,11 +131,21 @@ def _galore_quant_inner_axes(p_axes, p_struct, gcfg: GaLoreConfig):
     """Axes for the galore-MANAGED Adam state ({m, v, count}) when the quant
     policy is active: int8 leaves carry {"q", "scale"} dicts — codes shard
     like the fp32 moment they replace, scales stay replicated."""
-    plans = plan_for_params(p_struct, gcfg)
+    plans = plan_for_params(p_struct, gcfg, param_axes=p_axes)
     proj_ax = _projected_axes(p_axes, p_struct, gcfg)
 
     def per_leaf(ax, plan):
         if plan.moments == "int8":
+            if plan.zero:
+                # ZeRO ownership: the per-block scales shard their rank dim
+                # with the codes (blocking never runs along rank, so both
+                # are bitwise rank-block slices — core/subspace.py)
+                from repro.core.subspace import moment_quant_axis
+
+                blocked = moment_quant_axis(plan) % max(len(ax), 1)
+                scale = tuple(None if i == blocked else a
+                              for i, a in enumerate(ax))
+                return {"q": ax, "scale": scale}
             return {"q": ax, "scale": tuple(None for _ in ax)}
         return ax
 
@@ -129,8 +153,8 @@ def _galore_quant_inner_axes(p_axes, p_struct, gcfg: GaLoreConfig):
     return {"m": mv, "v": mv, "count": SCALAR}  # axes trees are read-only
 
 
-def _projected_struct(p_struct, gcfg: GaLoreConfig):
-    plans = plan_for_params(p_struct, gcfg)
+def _projected_struct(p_struct, gcfg: GaLoreConfig, p_axes=None):
+    plans = plan_for_params(p_struct, gcfg, param_axes=p_axes)
     from repro.core.subspace import r_shape
 
     def per_leaf(p, plan):
@@ -160,7 +184,7 @@ def galore_refresh_gather_axes(gcfg: GaLoreConfig, p_axes, p_struct):
     and the packed proj_store forms re-quantize downstream of this tree, so
     the axes here are always the unpacked (kept, None) layout. Non-galore
     leaves are scalar placeholders."""
-    plans = plan_for_params(p_struct, gcfg)
+    plans = plan_for_params(p_struct, gcfg, param_axes=p_axes)
 
     def per_leaf(ax, plan):
         if not plan.galore:
@@ -194,7 +218,7 @@ def optimizer_state_axes(tc: TrainConfig, p_axes, p_struct):
             inner_axes = _galore_quant_inner_axes(p_axes, p_struct, gcfg)
         else:
             inner_axes = _stats_axes(tc, _projected_axes(p_axes, p_struct, gcfg),
-                                     _projected_struct(p_struct, gcfg))
+                                     _projected_struct(p_struct, gcfg, p_axes))
         stats_axes = {
             "step": SCALAR,
             "key": SCALAR,

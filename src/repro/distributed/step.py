@@ -156,11 +156,12 @@ def _make_compressed_train_step(cfg, tc, rules, opt, loss_of):
     """
     from repro.core.galore import _project, plan_for_params
     from repro.core.projector import read_projector
-    from repro.core.subspace import proj_shape
-    from repro.optim.factory import galore_state_index
+    from repro.core.subspace import _lead, plan_rank_axis, proj_shape
+    from repro.optim.factory import effective_galore_config, galore_state_index
 
     idx = galore_state_index(tc)
     axes = M.param_axes(cfg)
+    gcfg = effective_galore_config(tc)
 
     def train_step(params, opt_state, batch):
         with sharding_context(rules):
@@ -168,7 +169,7 @@ def _make_compressed_train_step(cfg, tc, rules, opt, loss_of):
                 dp = rules.mesh_axis_size(rules.rules.get("batch"))
             else:
                 dp = 2  # CPU testing: exercise the same code path
-            plans = plan_for_params(params, tc.galore, param_axes=axes)
+            plans = plan_for_params(params, gcfg, param_axes=axes)
 
             vs_batch = jax.tree_util.tree_map(
                 lambda x: x.reshape((dp, x.shape[0] // dp) + x.shape[1:]), batch
@@ -193,7 +194,18 @@ def _make_compressed_train_step(cfg, tc, rules, opt, loss_of):
                     # leading virtual-shard dim; the weight shape is [1:])
                     P32 = read_projector(
                         P, proj_shape(jax.ShapeDtypeStruct(gv.shape[1:], gv.dtype), plan))
-                    return jnp.mean(_project(gv, P32, plan), axis=0)
+                    R = jnp.mean(_project(gv, P32, plan), axis=0)
+                    if plan.zero and gcfg.zero >= 2:
+                        # ZeRO-2: pin the reduced compact gradient straight
+                        # onto the rank-block ownership shards, so the
+                        # cross-replica mean lowers as a reduce-scatter
+                        # (each owner receives only its r/n_dp slice)
+                        if plan.side == "left":
+                            lab = (plan_rank_axis(plan, plan.ax_n), plan.ax_n)
+                        else:
+                            lab = (plan.ax_m, plan_rank_axis(plan, plan.ax_m))
+                        R = logical_constraint(R, *_lead(R, *lab))
+                    return R
                 return jnp.mean(gv.astype(jnp.float32), axis=0)
 
             grads_c = jax.tree_util.tree_map(fold, grads_vs, proj, plans)

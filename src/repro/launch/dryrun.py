@@ -262,8 +262,12 @@ def run_cell(
     return rec
 
 
-def main():
-    ap = argparse.ArgumentParser()
+def build_parser():
+    """Argparse parser for the dry-run analyzer (introspected by
+    docs/gen_cli.py; the generated docs/cli.md is drift-checked in CI)."""
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.dryrun",
+        description="AOT memory/FLOPs dry-run over the arch × shape grid")
     ap.add_argument("--out", default="results/dryrun.json")
     ap.add_argument("--arch", nargs="*", default=None)
     ap.add_argument("--shape", nargs="*", default=None)
@@ -278,7 +282,11 @@ def main():
     cli.add_quant_flags(ap)
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--skip-scaling", action="store_true")
-    args = ap.parse_args()
+    return ap
+
+
+def main():
+    args = build_parser().parse_args()
 
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     results = {}

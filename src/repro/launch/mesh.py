@@ -89,6 +89,10 @@ def default_rules(mesh, *, long_context: bool = False) -> ShardingRules:
         "rank_model": "model",
         "rank_data": "data",
         "qblocks": "data",
+        # GaLore-ZeRO ownership dim (galore_zero > 0): the rank block (or
+        # passthrough weight block) a DP replica OWNS — persistent optimizer
+        # state sharded over the data axes, ~1/n_dp bytes per replica
+        "zero": batch_axes if len(batch_axes) > 1 else batch_axes[0],
         # kv cache: context-sharded at decode (flash-decode semantics)
         "kv_seq": ("data", "model") if long_context else "model",
         "kv_heads": None,

@@ -126,8 +126,12 @@ def load_checkpoint_params(cfg, ckpt_dir: str):
     return restored["params"], step
 
 
-def main():
-    ap = argparse.ArgumentParser()
+def build_parser():
+    """Argparse parser for the serving launcher (introspected by
+    docs/gen_cli.py; the generated docs/cli.md is drift-checked in CI)."""
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.serve",
+        description="Continuous-batching serving engine over a paged KV cache")
     cli.add_arch_flags(ap, default_arch="qwen2_7b")
     cli.add_ckpt_flags(ap, default_dir=None, save_flags=False)
     ap.add_argument("--max-new", type=int, default=16)
@@ -138,7 +142,11 @@ def main():
                     help="per-request prompt+generation ceiling (block-table "
                          "width); requests may set a smaller max_len")
     ap.add_argument("--prefill-chunk", type=int, default=32)
-    args = ap.parse_args()
+    return ap
+
+
+def main():
+    args = build_parser().parse_args()
     cfg = get_config(args.arch, smoke=not args.full)
     key = jax.random.PRNGKey(0)
     if args.ckpt_dir:

@@ -45,10 +45,46 @@ class RunConfig:
     ckpt_quantize: str | None = None
 
 
+def zero_state_shardings(cfg, tc, rules, opt_state=None):
+    """NamedSharding tree for the owner-partitioned optimizer state.
+
+    Derived from distributed/state_sharding.optimizer_state_axes — the same
+    ownership map (core/subspace.py zero_state_axes) the in-step constraints
+    pin, so initial placement, per-step outputs and checkpoint restores all
+    agree on which rank block each DP replica holds. Leaves without a shape
+    (empty chain states) come back as None."""
+    from repro.distributed.state_sharding import optimizer_state_axes
+    from repro.utils import is_axes
+
+    p_struct = jax.eval_shape(lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+    axes = optimizer_state_axes(tc, M.param_axes(cfg), p_struct)
+    if opt_state is None:
+        _, opt = make_train_step(cfg, tc, rules)
+        opt_state = jax.eval_shape(opt.init, p_struct)
+
+    def per_leaf(ax, s):
+        if not hasattr(s, "shape"):
+            return None
+        return rules.sharding_for(ax, s.shape)
+
+    return jax.tree_util.tree_map(per_leaf, axes, opt_state, is_leaf=is_axes)
+
+
 def build_state(cfg, tc, rules, key):
     params = M.init_params(cfg, key)
     _, opt = make_train_step(cfg, tc, rules)
     opt_state = opt.init(params)
+    if tc.galore_zero and rules is not None:
+        # GaLore-ZeRO: place the freshly-initialized optimizer state onto
+        # its ownership shards — each DP replica holds its rank block from
+        # step 0, and the in-step constraints keep it there
+        shardings = zero_state_shardings(cfg, tc, rules, opt_state)
+        # shardings first: its None leaves (shapeless state nodes) must pair
+        # with whole state subtrees, not be traversed as empty pytrees
+        opt_state = jax.tree_util.tree_map(
+            lambda sh, s: s if sh is None else jax.device_put(s, sh),
+            shardings, opt_state,
+            is_leaf=lambda x: x is None)
     return params, opt_state
 
 
@@ -403,7 +439,18 @@ def train_loop(run: RunConfig, tc: TrainConfig, cfg=None, on_step=None,
                     param_axes=M.param_axes(cfg)))
         if guarded and "guard" in groups:
             target["guard"] = guard
-        restored = ckpt.restore(which, target)
+        shardings = None
+        if tc.galore_zero:
+            # elastic ZeRO restore: saves gather full leaves onto the host
+            # (manager._flatten), so a checkpoint written at any n_dp
+            # re-places onto THIS mesh's ownership shards — restore at a
+            # different replica count is just a different device_put
+            rep = jax.sharding.NamedSharding(
+                rules.mesh, jax.sharding.PartitionSpec())
+            shardings = jax.tree_util.tree_map(lambda _: rep, target)
+            shardings["opt_state"] = zero_state_shardings(
+                cfg, tc, rules, opt_state)
+        restored = ckpt.restore(which, target, shardings=shardings)
         params, opt_state = restored["params"], restored["opt_state"]
         if "pending" in restored:
             driver.restore_pending(restored["pending"])
@@ -530,10 +577,17 @@ def train_loop(run: RunConfig, tc: TrainConfig, cfg=None, on_step=None,
     return params, opt_state, metrics, run.steps - 1
 
 
-def main():
+def build_parser():
+    """Argparse parser for the training launcher.
+
+    Kept separate from main() so docs/gen_cli.py can introspect the full
+    flag surface (the generated docs/cli.md is drift-checked in CI).
+    """
     from repro.launch import cli
 
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.train",
+        description="GaLore training launcher (smoke-scale by default)")
     cli.add_arch_flags(ap, default_arch="llama_60m")
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--optimizer", default="adamw")
@@ -577,6 +631,26 @@ def main():
     ap.add_argument("--galore-fused-apply", action="store_true",
                     help="fold the weight update into the fused-kernel "
                          "epilogue (requires --galore-fused)")
+    ap.add_argument("--galore-dp-compress", action="store_true",
+                    help="all-reduce gradients in the compact r-dim domain "
+                         "(project per-replica, mean R, update once) instead "
+                         "of the full m×n domain")
+    ap.add_argument("--galore-zero", type=int, default=0, choices=(0, 1, 2),
+                    help="GaLore-ZeRO optimizer-state partitioning: 1 shards "
+                         "the persistent compact state (moments, projectors, "
+                         "quantization payloads) rank-blockwise across "
+                         "data-parallel replicas (~1/n_dp optimizer bytes "
+                         "per replica; the back-projection's psum doubles as "
+                         "the weight-delta all-gather); 2 additionally "
+                         "reduce-scatters compact gradients to owners "
+                         "(implies --galore-dp-compress, fp32 moments only); "
+                         "0 keeps state replicated")
+    ap.add_argument("--galore-tp-aware-side", action="store_true",
+                    help="choose the projection side from the parameter's "
+                         "sharding instead of min(m, n): a tensor-parallel "
+                         "weight projects along its REPLICATED dim so the "
+                         "kept dim stays sharded (changes numerics vs the "
+                         "paper's shape rule; off by default)")
     cli.add_quant_flags(ap)
     ap.add_argument("--anomaly-guard", action="store_true",
                     help="per-step anomaly guard: non-finite loss/grad-norm "
@@ -604,6 +678,13 @@ def main():
     ap.add_argument("--seq", type=int, default=256)
     cli.add_ckpt_flags(ap, default_dir="/tmp/repro_ckpt")
     ap.add_argument("--log-every", type=int, default=10)
+    return ap
+
+
+def main():
+    from repro.launch import cli
+
+    ap = build_parser()
     args = ap.parse_args()
 
     galore = (
@@ -614,6 +695,7 @@ def main():
                                       or args.galore_stagger_importance),
                      stagger_by_importance=args.galore_stagger_importance,
                      reproject_moments=args.galore_reproject_moments,
+                     tp_aware_side=args.galore_tp_aware_side,
                      quant=cli.quant_policy_from(args))
         if args.galore_rank > 0 or args.galore_rank_frac > 0
         else None
@@ -634,6 +716,20 @@ def main():
     if args.galore_recalibrate_costs and not args.galore_refresh_async:
         ap.error("--galore-recalibrate-costs is driven by the async refresh "
                  "driver; add --galore-refresh-async")
+    if args.galore_zero and galore is None:
+        ap.error("--galore-zero requires --galore-rank or "
+                 "--galore-rank-frac > 0")
+    if args.galore_tp_aware_side and galore is None:
+        ap.error("--galore-tp-aware-side requires --galore-rank or "
+                 "--galore-rank-frac > 0")
+    if args.galore_dp_compress and galore is None:
+        ap.error("--galore-dp-compress requires --galore-rank or "
+                 "--galore-rank-frac > 0")
+    if (args.galore_zero == 2 and galore is not None
+            and galore.quant.quantizes_moments):
+        ap.error("--galore-zero 2 reduce-scatters compact gradients onto "
+                 "fp32 owner moments; it cannot compose with quantized "
+                 "moment state (drop --quant-moments / use --galore-zero 1)")
     from repro.robust import TRACED_KINDS, parse_fault
 
     try:
@@ -656,6 +752,10 @@ def main():
         galore_external_refresh=args.galore_external_refresh,
         galore_refresh_shard=args.galore_refresh_shard,
         galore_refresh_async=args.galore_refresh_async,
+        # ZeRO-2 reduce-scatters in the compact domain, so it rides on the
+        # dp-compress step path (base.py: galore_zero == 2 implies it)
+        galore_dp_compress=(args.galore_dp_compress or args.galore_zero == 2),
+        galore_zero=args.galore_zero,
         galore_calibrate_costs=args.galore_calibrate_costs,
         galore_recalibrate_every=args.galore_recalibrate_costs,
         anomaly_guard=args.anomaly_guard,

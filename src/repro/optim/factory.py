@@ -46,6 +46,8 @@ def effective_galore_config(tc: TrainConfig) -> GaLoreConfig | None:
     if tc.optimizer == "adam8bit" and g.quant.moments == "fp32":
         g = dataclasses.replace(
             g, quant=dataclasses.replace(g.quant, moments="int8"))
+    if tc.galore_zero and g.zero != tc.galore_zero:
+        g = dataclasses.replace(g, zero=tc.galore_zero)
     return g
 
 
@@ -81,6 +83,20 @@ def build_optimizer(tc: TrainConfig, param_axes=None) -> GradientTransformation:
             )
         if tc.galore_fused_apply and not tc.galore_fused_adam:
             raise ValueError("galore_fused_apply requires galore_fused_adam")
+        if gcfg.zero not in (0, 1, 2):
+            raise ValueError(f"galore_zero must be 0, 1 or 2, got {gcfg.zero!r}")
+        if gcfg.zero == 2:
+            # ZeRO-2 rides the dp-compress path: gradients are projected per
+            # DP shard and the cross-replica mean runs in the compact domain
+            # with a rank-sharded output — XLA emits the reduce-scatter.
+            if not tc.galore_dp_compress:
+                raise ValueError(
+                    "galore_zero=2 reduce-scatters projected gradients, which "
+                    "requires the galore_dp_compress step path")
+            if gcfg.quant.quantizes_moments:
+                raise ValueError(
+                    "galore_zero=2 requires fp32 moments (quantized moments "
+                    "are incompatible with pre_projected gradients)")
         if tc.optimizer == "adam8bit":
             # quantization is handled by the galore-managed subsystem; the
             # inner transform only defines the Adam hyperparameters

@@ -46,6 +46,7 @@ class ServeConfig:
 
     @property
     def blocks_per_table(self) -> int:
+        """Block-table width: ``ceil(max_len_cap / block_size)`` slots."""
         return -(-self.max_len_cap // self.block_size)
 
     def __post_init__(self):
@@ -105,6 +106,7 @@ class Completion:
 
     @property
     def latency_s(self) -> float:
+        """End-to-end seconds from submit to the last generated token."""
         return self.finished_at - self.submitted_at
 
     @property
